@@ -1,0 +1,148 @@
+"""Paper Fig. 3: end-to-end llama2-7B (Q4_0) inference latency through the
+scheduler — prefill (1024-token prompt, INT8 compute-bound) and decode
+(memory-bound), static-OpenMP vs dynamic, plus a llama.cpp-style baseline.
+
+Modeling notes (documented in EXPERIMENTS.md):
+ * Every GEMM/GEMV of each layer is dispatched through the scheduler on the
+   virtual hybrid machine; multi-head attention is dispatched *statically*
+   in BOTH variants — the paper applies its method to GEMM kernels only
+   ("Other kernels, like multi-head attention, do not benefit"), which is
+   why e2e gains are lower than kernel-level gains.
+ * llama.cpp = static scheduling + less-optimized compute kernels; its
+   INT8/INT4 compute kernels are modeled at 45% of Neural Speed's
+   throughput (Shen et al. 2023 report ~2.2x kernel gains over llama.cpp),
+   memory-bound GEMV at 90%.
+ * Paper reference: prefill +20-30%, decode +9-22% over static Neural
+   Speed; up to 3.7x vs llama.cpp; decode ~16 tokens/s.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (
+    CPURuntime,
+    DynamicScheduler,
+    KernelSpec,
+    StaticScheduler,
+    VirtualWorkerPool,
+    make_machine,
+)
+
+from .common import Q4_BYTES_PER_ELEM, fmt
+
+PROMPT = 1024
+DECODE_STEPS = 16
+
+
+def _prefill_kernels(cfg, s: int, eff: float, attn_factor: float = 4.0):
+    """(name, N, work_MACs_per_N_unit) for one layer, prefill phase."""
+    d, hd = cfg.d_model, cfg.hd
+    qkv_n = (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+    return [
+        ("qkv", qkv_n, s * d / eff),
+        # attention runs the fp32 (non-VNNI) path: ~4x the MAC-equivalent
+        # work; static in both variants (paper: MHA is not dispatched)
+        ("attn", cfg.n_heads, attn_factor * 2 * s * s * hd),
+        ("wo", d, s * cfg.n_heads * hd / eff),
+        ("w13", 2 * cfg.d_ff, s * d / eff),
+        ("w2", d, s * cfg.d_ff / eff),
+    ]
+
+
+def _decode_kernels(cfg, ctx: int, eff: float):
+    """(name, N, work_bytes_per_N_unit) for one layer, decode phase."""
+    d, hd = cfg.d_model, cfg.hd
+    qkv_n = (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+    kv_bytes = 2 * ctx * hd * 2  # k+v fp16 per kv head
+    return [
+        ("qkv", qkv_n, d * Q4_BYTES_PER_ELEM / eff),
+        ("attn", cfg.n_kv_heads, kv_bytes / eff),      # static in both
+        ("wo", d, cfg.n_heads * hd * Q4_BYTES_PER_ELEM / eff),
+        ("w13", 2 * cfg.d_ff, d * Q4_BYTES_PER_ELEM / eff),
+        ("w2", d, cfg.d_ff * Q4_BYTES_PER_ELEM / eff),
+    ]
+
+
+def simulate(machine_name: str, *, dynamic: bool, gemm_eff: float = 1.0,
+             gemv_eff: float = 1.0, warm_iters: int = 3,
+             attn_factor: float = 4.0):
+    """Returns (prefill_seconds, decode_seconds_per_token)."""
+    cfg = get_config("llama2-7b")
+    machine = make_machine(machine_name)
+    runtime = CPURuntime(machine.n_cores, alpha=0.3)
+
+    def run_phase(isa: str, kernels, layers: int, head_work: float,
+                  elt_bytes_per_layer: float = 0.0):
+        pool = VirtualWorkerPool(machine, isa=isa)
+        dyn = DynamicScheduler(runtime, pool)
+        sta = StaticScheduler(pool)
+        # norms / rope / residual / dynamic-quant passes: bandwidth-bound
+        # elementwise work, outside the scheduler in both variants
+        elt = elt_bytes_per_layer / machine.true_throughput("membw").sum()
+        t0 = pool.clock
+        for _ in range(layers):
+            for name, n, work in kernels:
+                spec = KernelSpec(name=name, isa=isa, granularity=8,
+                                  work_per_unit=work)
+                if name == "attn" or not dynamic:
+                    sta.dispatch(spec, n)
+                else:
+                    dyn.dispatch(spec, n)
+            pool.clock += elt
+        head = KernelSpec(name="head", isa=isa, granularity=8,
+                          work_per_unit=head_work)
+        (dyn if dynamic else sta).dispatch(head, cfg.vocab_size)
+        return pool.clock - t0
+
+    elt_prefill = 20 * PROMPT * cfg.d_model  # bytes per layer
+    elt_decode = 20 * cfg.d_model
+    # warm the ratio table the way the paper does (first kernels adapt fast)
+    for _ in range(warm_iters):
+        run_phase("avx_vnni", _prefill_kernels(cfg, PROMPT, gemm_eff, attn_factor),
+                  cfg.n_layers, PROMPT * cfg.d_model / gemm_eff, elt_prefill)
+    prefill = run_phase("avx_vnni", _prefill_kernels(cfg, PROMPT, gemm_eff, attn_factor),
+                        cfg.n_layers, PROMPT * cfg.d_model / gemm_eff,
+                        elt_prefill)
+    for _ in range(warm_iters):
+        run_phase("membw", _decode_kernels(cfg, PROMPT, gemv_eff),
+                  cfg.n_layers, cfg.d_model * Q4_BYTES_PER_ELEM / gemv_eff,
+                  elt_decode)
+    decode = np.mean([
+        run_phase("membw", _decode_kernels(cfg, PROMPT + i, gemv_eff),
+                  cfg.n_layers, cfg.d_model * Q4_BYTES_PER_ELEM / gemv_eff,
+                  elt_decode)
+        for i in range(DECODE_STEPS)
+    ])
+    return prefill, float(decode)
+
+
+def run() -> list[tuple]:
+    rows = []
+    for machine in ("ultra-125h", "core-12900k"):
+        pf_dyn, dec_dyn = simulate(machine, dynamic=True)
+        pf_sta, dec_sta = simulate(machine, dynamic=False)
+        pf_cpp, dec_cpp = simulate(machine, dynamic=False,
+                                   gemm_eff=0.45, gemv_eff=0.9)
+        # sensitivity: cache-hostile unblocked fp32 MHA (16x MAC-equiv),
+        # bracketing the paper's 20-30% e2e prefill band
+        pf_dyn_c, _ = simulate(machine, dynamic=True, attn_factor=16.0)
+        pf_sta_c, _ = simulate(machine, dynamic=False, attn_factor=16.0)
+        rows += [
+            (f"fig3_prefill_llamacpp_{machine}", fmt(pf_cpp), ""),
+            (f"fig3_prefill_static_{machine}", fmt(pf_sta), ""),
+            (f"fig3_prefill_dynamic_{machine}", fmt(pf_dyn),
+             f"vs_static_pct={(pf_sta - pf_dyn) / pf_dyn * 100:.0f}"
+             f"|vs_llamacpp_x={pf_cpp / pf_dyn:.1f}"),
+            (f"fig3_prefill_dynamic_slowmha_{machine}", fmt(pf_dyn_c),
+             f"vs_static_pct={(pf_sta_c - pf_dyn_c) / pf_dyn_c * 100:.0f}"),
+            (f"fig3_decode_llamacpp_{machine}", fmt(dec_cpp),
+             f"tok_s={1 / dec_cpp:.1f}"),
+            (f"fig3_decode_static_{machine}", fmt(dec_sta),
+             f"tok_s={1 / dec_sta:.1f}"),
+            (f"fig3_decode_dynamic_{machine}", fmt(dec_dyn),
+             f"tok_s={1 / dec_dyn:.1f}"
+             f"|vs_static_pct={(dec_sta - dec_dyn) / dec_dyn * 100:.0f}"),
+        ]
+    return rows

@@ -1,0 +1,45 @@
+"""Pallas kernel micro-bench (interpret mode = correctness + dispatch cost;
+real TPU timings are out of scope on this host).  Reports us/call and max
+error vs the pure-jnp oracle, plus the kernel's arithmetic volume."""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import int8_gemm, q4_matmul, ref
+from repro.quant import quantize_q4_0
+
+from .common import fmt
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jnp.asarray(out).block_until_ready()
+    return (time.perf_counter() - t0) / iters, out
+
+
+def run() -> list[tuple]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    m, n, k = 8, 512, 1024
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    qw = quantize_q4_0(jnp.asarray(rng.normal(size=(n, k)).astype(np.float32)))
+    t, out = _time(lambda a, b: q4_matmul(a, b, interpret=True), x, qw)
+    err = float(jnp.max(jnp.abs(out - ref.q4_matmul_ref(x, qw))))
+    rows.append(("kernel_q4_matmul_interp", fmt(t),
+                 f"flops={2 * m * n * k}|max_err={err:.2e}"))
+
+    a = jnp.asarray(rng.integers(0, 256, size=(128, 512)), dtype=jnp.uint8)
+    w = jnp.asarray(rng.integers(-127, 128, size=(256, 512)), dtype=jnp.int8)
+    t, out = _time(lambda p, q: int8_gemm(p, q, interpret=True), a, w)
+    exact = bool((out == ref.int8_gemm_ref(a, w)).all())
+    rows.append(("kernel_int8_gemm_interp", fmt(t),
+                 f"flops={2 * 128 * 256 * 512}|exact={exact}"))
+    return rows

@@ -1,0 +1,53 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Every benchmark emits rows ``(name, us_per_call, derived)`` where
+``derived`` is a short ``key=value|key=value`` string — printed as CSV by
+``benchmarks/run.py``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    CPURuntime,
+    DynamicScheduler,
+    KernelSpec,
+    StaticScheduler,
+    VirtualWorkerPool,
+    make_machine,
+)
+
+# Paper Fig. 2 kernel problems.
+GEMM_SHAPE = (1024, 4096, 4096)   # M, N, K — prefill INT8 GEMM
+GEMV_SHAPE = (1, 4096, 4096)      # decode INT4 GEMV
+Q4_BYTES_PER_ELEM = 0.5625        # int4 + fp16 scale / group32
+
+GEMM_KERNEL = KernelSpec(name="int8_gemm", isa="avx_vnni", granularity=16,
+                         work_per_unit=2 * 1024 * 4096)      # MACs per N col
+GEMV_KERNEL = KernelSpec(name="q4_gemv", isa="membw", granularity=8,
+                         work_per_unit=4096 * Q4_BYTES_PER_ELEM)  # bytes/row
+
+
+def steady_state(machine_name: str, kernel: KernelSpec, s: int, *,
+                 iters: int = 40, tail: int = 10, seed: int = 0):
+    """(dynamic steady-state makespan, static makespan, optimal, machine)."""
+    machine = make_machine(machine_name, seed=seed)
+    pool = VirtualWorkerPool(machine, isa=kernel.isa)
+    sched = DynamicScheduler(CPURuntime(machine.n_cores, alpha=0.3), pool)
+    for _ in range(iters):
+        sched.dispatch(kernel, s)
+    dyn = float(np.mean([st.makespan for st in sched.stats[-tail:]]))
+
+    machine2 = make_machine(machine_name, seed=seed)
+    static = StaticScheduler(VirtualWorkerPool(machine2, isa=kernel.isa))
+    for _ in range(tail):
+        static.dispatch(kernel, s)
+    sta = float(np.mean([st.makespan for st in static.stats]))
+    opt = machine.optimal_makespan(kernel.isa, s * kernel.work_per_unit)
+    return dyn, sta, opt, machine
+
+
+def fmt(seconds: float) -> float:
+    """seconds -> microseconds."""
+    return seconds * 1e6

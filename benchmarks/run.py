@@ -1,0 +1,60 @@
+"""Benchmark entrypoint — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Paper-claim checks are printed as
+trailing comments so `python -m benchmarks.run` doubles as a reproduction
+report.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import bench_gemm_parallel, bench_gemv_bandwidth, bench_e2e
+    from . import bench_ratio_trace, bench_kernels
+
+    rows = []
+    for mod in (bench_gemm_parallel, bench_gemv_bandwidth, bench_e2e,
+                bench_ratio_trace, bench_kernels):
+        rows += mod.run()
+
+    print("name,us_per_call,derived")
+    derived = {}
+    for name, us, extra in rows:
+        print(f"{name},{us:.1f},{extra}")
+        for kv in str(extra).split("|"):
+            if "=" in kv:
+                k, v = kv.split("=", 1)
+                derived[(name, k)] = v
+
+    def grab(name, key, cast=float):
+        v = derived.get((name, key))
+        if v is None:
+            return None
+        return cast(v.rstrip("%x"))
+
+    print()
+    print("# paper-claim checks (paper value -> reproduced)")
+    checks = [
+        ("GEMM improvement Ultra-125H", "65%",
+         grab("fig2_gemm_dynamic_ultra-125h", "improvement_pct")),
+        ("GEMM improvement 12900K", "85%",
+         grab("fig2_gemm_dynamic_core-12900k", "improvement_pct")),
+        ("GEMV bandwidth (>90% of MLC)", ">90%",
+         grab("fig2_gemv_dynamic_ultra-125h", "of_mlc")),
+        ("prefill vs static (20-30%)", "20-30%",
+         grab("fig3_prefill_dynamic_ultra-125h", "vs_static_pct")),
+        ("decode vs static (9-22%)", "9-22%",
+         grab("fig3_decode_dynamic_ultra-125h", "vs_static_pct")),
+        ("speedup vs llama.cpp (up to 3.7x)", "3.7x",
+         grab("fig3_prefill_dynamic_ultra-125h", "vs_llamacpp_x")),
+        ("decode tokens/s (~16)", "16",
+         grab("fig3_decode_dynamic_ultra-125h", "tok_s")),
+    ]
+    for label, paper, ours in checks:
+        print(f"# {label}: paper={paper} ours={ours}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Batched serving with heterogeneous replicas: the paper's Eq. 3 routes
+requests proportionally to measured replica throughput.
+
+  PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import numpy as np
+import jax
+
+from repro.configs import reduced_config
+from repro.models import init_params
+from repro.serving import RoutedServer, ServeEngine
+
+
+def main():
+    cfg = reduced_config("granite-8b")
+    params = init_params(cfg, jax.random.key(0))
+    engines = [ServeEngine(cfg, params, batch_size=8, max_seq=48)
+               for _ in range(2)]
+    srv = RoutedServer(engines)
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, size=(8, 8), dtype=np.int32)
+
+    # Replica 1 simulated 3x slower (co-tenant / old hardware): watch the
+    # router shift the batch split from 4:4 toward ~6:2.
+    speeds = np.array([3.0, 1.0])
+    for round_ in range(5):
+        planned = srv.router.split(len(prompts))
+        out, counts, _ = srv.serve_batch(
+            prompts, n_steps=4,
+            times_override=np.maximum(planned, 1e-3) / speeds)
+        print(f"[serve] round {round_}: split={counts.tolist()} "
+              f"ratios={srv.runtime.ratios('serve_step').round(2).tolist()}")
+    assert out.shape[0] == len(prompts)
+    print("[serve] done; generated shape:", out.shape)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Regenerate the EXPERIMENTS.md roofline tables from experiments/dryrun/.
+
+  PYTHONPATH=src python scripts/make_experiments_tables.py > /tmp/tables.md
+"""
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.configs import ARCHS, SHAPES, get_config, shape_supported  # noqa
+
+
+def load(mesh_tag):
+    out = {}
+    for p in glob.glob(f"experiments/dryrun/*__{mesh_tag}.json"):
+        if mesh_tag == "16x16" and "2x16x16" in p:
+            continue
+        d = json.load(open(p))
+        out[(d["arch"], d["shape"])] = d
+    return out
+
+
+def fmt_row(d):
+    mem = (d.get("peak_mem_bytes") or 0) / 1e9
+    return (f"| {d['arch']} | {d['shape']} | {d['t_compute']:.4f} | "
+            f"{d['t_memory']:.4f} | {d['t_collective']:.3f} | "
+            f"{d.get('t_collective_tpu', 0):.3f} | {d['bottleneck']} | "
+            f"{d['roofline_fraction']*100:.1f}% | "
+            f"{d['useful_flops_fraction']*100:.0f}% | {mem:.1f} |")
+
+
+def main():
+    for tag, title in (("16x16", "Single pod (16x16 = 256 chips)"),
+                       ("2x16x16", "Multi-pod (2x16x16 = 512 chips)")):
+        cells = load(tag)
+        if not cells:
+            continue
+        print(f"\n### {title}\n")
+        print("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+              "t_coll_tpu (s) | bound | roofline frac | useful flops | mem GB/dev |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+        for arch in ARCHS:
+            cfg = get_config(arch)
+            for shape in SHAPES:
+                if not shape_supported(cfg, shape):
+                    print(f"| {arch} | {shape} | — | — | — | — | SKIP "
+                          f"(needs sub-quadratic attn) | — | — | — |")
+                    continue
+                d = cells.get((arch, shape))
+                print(fmt_row(d) if d else
+                      f"| {arch} | {shape} | (missing) |||||||||")
+        n_ok = len(cells)
+        print(f"\n{n_ok} cells compiled on {title}.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""repro: dynamic parallel method for hybrid compute, at framework scale.
+
+Faithful reproduction of "A dynamic parallel method for performance
+optimization on hybrid CPUs" (CS.DC 2024) plus its TPU-pod-scale adaptation:
+workload-balancing schedulers, Q4_0/INT8 quantized kernels (Pallas), a
+10-architecture model zoo, pjit/shard_map distribution, serving and training
+stacks, and a multi-pod dry-run + roofline harness.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,5 @@
+"""Checkpointing substrate (atomic, versioned, elastic)."""
+
+from .ckpt import save, restore, latest_step, all_steps
+
+__all__ = ["save", "restore", "latest_step", "all_steps"]

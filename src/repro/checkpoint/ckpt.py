@@ -1,0 +1,102 @@
+"""Fault-tolerant checkpointing: atomic, versioned, elastic-reshardable.
+
+* Atomicity: write into ``step_XXXX.tmp`` then ``os.replace`` — a crash
+  mid-write never corrupts the latest valid checkpoint.
+* Fault tolerance: ``latest_step``/``restore`` let a relaunched job resume
+  (see ``launch/train.py``); ``keep_last`` bounds disk.
+* Elasticity: arrays are stored unsharded (device_get), so a restore may
+  target a *different* mesh — pass ``shardings`` and each leaf is
+  device_put to its new layout.  At real pod scale this becomes one file
+  per host plus a reshard step; the interface is unchanged.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(p).strip("[].'") for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, extra: Optional[dict] = None,
+         keep_last: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, "extra": extra or {},
+                   "keys": sorted(flat)}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    _cleanup(ckpt_dir, keep_last)
+    return final
+
+
+def _cleanup(ckpt_dir: str, keep_last: int) -> None:
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep_last] if keep_last > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d{8})", name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "meta.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, template: Any,
+            shardings: Any = None) -> tuple[Any, dict]:
+    """Restore into the structure of ``template`` (values ignored).
+
+    ``shardings``: optional pytree of jax.sharding.Sharding matching
+    ``template`` — enables elastic restore onto a different mesh.
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+
+    leaves_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    shard_leaves = (jax.tree.leaves(shardings, is_leaf=lambda x: x is None)
+                    if shardings is not None else [None] * len(leaves_t))
+    out = []
+    for (path_t, leaf), shard in zip(leaves_t, shard_leaves):
+        key = "/".join(str(p).strip("[].'") for p in path_t)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        out.append(jax.device_put(arr, shard) if shard is not None
+                   else jax.device_put(arr))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), out)
+    return tree, meta

@@ -1,0 +1,60 @@
+"""Core of the reproduction: the paper's dynamic parallel method.
+
+Faithful layer (paper §2): :mod:`ratio`, :mod:`pool`, :mod:`scheduler`,
+:mod:`hybrid_sim`.  TPU-scale adaptation: :mod:`balance`, :mod:`tuner`.
+"""
+
+from .ratio import (
+    optimal_shares,
+    observed_ratios,
+    ema_update,
+    proportional_partition,
+    partition_ranges,
+    makespan,
+)
+from .pool import SubTask, ThreadWorkerPool, VirtualWorkerPool
+from .scheduler import KernelSpec, CPURuntime, DynamicScheduler, StaticScheduler
+from .hybrid_sim import CoreSpec, SimulatedHybridCPU, make_machine, MACHINES
+from .balance import (
+    DeviceRuntime,
+    UnevenBatchPlanner,
+    ExpertCapacityPlanner,
+    ReplicaRouter,
+)
+from .tuner import KernelTuner, shape_class
+from .pipeline import (
+    PipelinePlan,
+    plan_stages,
+    choose_microbatches,
+    layer_costs_from_config,
+)
+
+__all__ = [
+    "optimal_shares",
+    "observed_ratios",
+    "ema_update",
+    "proportional_partition",
+    "partition_ranges",
+    "makespan",
+    "SubTask",
+    "ThreadWorkerPool",
+    "VirtualWorkerPool",
+    "KernelSpec",
+    "CPURuntime",
+    "DynamicScheduler",
+    "StaticScheduler",
+    "CoreSpec",
+    "SimulatedHybridCPU",
+    "make_machine",
+    "MACHINES",
+    "DeviceRuntime",
+    "UnevenBatchPlanner",
+    "ExpertCapacityPlanner",
+    "ReplicaRouter",
+    "KernelTuner",
+    "shape_class",
+    "PipelinePlan",
+    "plan_stages",
+    "choose_microbatches",
+    "layer_costs_from_config",
+]

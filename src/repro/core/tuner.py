@@ -1,0 +1,74 @@
+"""Per-kernel configuration tuner — the TPU analogue of per-ISA tables.
+
+The paper keys its performance tables by ISA because P- and E-cores have
+different relative throughput per instruction family.  A TPU chip is
+internally homogeneous, but a Pallas kernel has the same phenomenon one
+level up: the best *block configuration* (BlockSpec tile shapes) depends on
+the problem shape and on which resource (MXU vs VMEM bandwidth) binds.  The
+tuner keeps an EMA of measured runtime per (kernel, shape-class, config) and
+selects the argmin config at dispatch time — converging online exactly like
+the paper's ratio table, and re-adapting if the environment drifts.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, Hashable, Sequence, Tuple
+
+__all__ = ["KernelTuner", "shape_class"]
+
+
+def shape_class(*dims: int) -> Tuple[int, ...]:
+    """Bucket a shape so that near-identical problems share a table entry
+    (next power of two per dim)."""
+    return tuple(1 << max(0, math.ceil(math.log2(max(d, 1)))) for d in dims)
+
+
+@dataclass
+class _Entry:
+    ema: float = math.inf
+    count: int = 0
+
+
+class KernelTuner:
+    """Online EMA argmin over candidate configs.
+
+    ``alpha`` follows the paper's filter (new measurement weighted 1-alpha).
+    Exploration: until every candidate has ``min_trials`` measurements, the
+    least-measured config is chosen (round-robin warmup, mirroring the
+    paper's "ratios start at 1 and converge within a few kernels").
+    """
+
+    def __init__(self, alpha: float = 0.3, min_trials: int = 2):
+        self.alpha = alpha
+        self.min_trials = min_trials
+        self._tables: Dict[Hashable, Dict[Hashable, _Entry]] = {}
+
+    def _table(self, key: Hashable, configs: Sequence[Hashable]):
+        tab = self._tables.setdefault(key, {})
+        for c in configs:
+            tab.setdefault(c, _Entry())
+        return tab
+
+    def select(self, key: Hashable, configs: Sequence[Hashable]) -> Hashable:
+        tab = self._table(key, configs)
+        cold = [c for c in configs if tab[c].count < self.min_trials]
+        if cold:
+            return min(cold, key=lambda c: tab[c].count)
+        return min(configs, key=lambda c: tab[c].ema)
+
+    def report(self, key: Hashable, config: Hashable, seconds: float) -> None:
+        tab = self._tables.setdefault(key, {})
+        e = tab.setdefault(config, _Entry())
+        if e.count == 0 or not math.isfinite(e.ema):
+            e.ema = seconds
+        else:
+            e.ema = self.alpha * e.ema + (1.0 - self.alpha) * seconds
+        e.count += 1
+
+    def best(self, key: Hashable) -> Hashable:
+        tab = self._tables.get(key)
+        if not tab:
+            raise KeyError(f"no measurements for {key!r}")
+        return min(tab, key=lambda c: tab[c].ema)

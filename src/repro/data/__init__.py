@@ -1,0 +1,5 @@
+"""Data pipeline substrate."""
+
+from .pipeline import DataConfig, SyntheticLM, Prefetcher
+
+__all__ = ["DataConfig", "SyntheticLM", "Prefetcher"]

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+``<name>.py`` holds the pallas_call + BlockSpec kernels, ``ops.py`` the jit'd
+public wrappers (padding + tuner dispatch), ``ref.py`` the pure-jnp oracles.
+"""
+
+from .ops import int8_gemm, int8_linear, q4_matmul, TunedMatmul
+from . import ref
+
+__all__ = ["int8_gemm", "int8_linear", "q4_matmul", "TunedMatmul", "ref"]

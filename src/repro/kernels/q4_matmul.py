@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: fused Q4_0 dequant + matmul (the paper's INT4 GEMV).
+
+The paper's decode hot-spot is "Fp32-Int4-Fp32" GEMV: weights stay packed in
+memory (0.5625 bytes/element) and are dequantized group-wise on the fly.
+This is memory-bandwidth bound, so the TPU kernel's objective is to stream
+the *packed* bytes HBM->VMEM (the f32 dequantized form exists only in
+VMEM/VREGs) — the same reason Neural Speed fuses dequant into the VNNI
+micro-kernel instead of materializing f32 weights.
+
+Layout note (TPU-native rethink): llama.cpp packs element j and j+16 of a
+32-group into one byte.  We keep that storage layout bit-for-bit (checkpoint
+compatible) and unpack with a reshape-free trick: a (bn, bk/2) byte tile is
+viewed as (bn, groups, 16); low and high nibbles are dequantized separately
+against a broadcast scale and contracted against the matching halves of the
+activation tile, avoiding any minor-dimension interleave on the VPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.quant.q4 import GROUP, QuantizedLinear
+
+__all__ = ["q4_matmul_pallas", "DEFAULT_BLOCKS", "CANDIDATE_BLOCKS"]
+
+# (bm, bn, bk): bk must be a multiple of GROUP (=32).
+DEFAULT_BLOCKS = (8, 256, 512)
+CANDIDATE_BLOCKS = (
+    (8, 256, 512),
+    (8, 512, 256),
+    (8, 128, 1024),
+    (128, 128, 512),
+    (256, 256, 256),
+)
+
+
+def _kernel(x_ref, p_ref, s_ref, o_ref, acc_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bn, half_bk = p_ref.shape
+    groups = half_bk * 2 // GROUP
+    bm, bk = x_ref.shape
+
+    packed = p_ref[...].reshape(bn, groups, GROUP // 2)
+    scales = s_ref[...].astype(jnp.float32)[..., None]  # (bn, groups, 1)
+    # Dequantize both nibble planes: plane 0 = elements 0..15 of each group,
+    # plane 1 = elements 16..31 (llama.cpp block_q4_0 layout).
+    lo = (packed & 0x0F).astype(jnp.float32)
+    hi = (packed >> 4).astype(jnp.float32)
+    w_lo = ((lo - 8.0) * scales).reshape(bn, half_bk)
+    w_hi = ((hi - 8.0) * scales).reshape(bn, half_bk)
+
+    # Matching activation halves: x viewed as (bm, groups, 32); first 16
+    # columns of each group hit the low plane, last 16 the high plane.
+    x = x_ref[...].astype(jnp.float32).reshape(bm, groups, GROUP)
+    x_lo = x[:, :, : GROUP // 2].reshape(bm, half_bk)
+    x_hi = x[:, :, GROUP // 2:].reshape(bm, half_bk)
+
+    acc_ref[...] += jnp.dot(x_lo, w_lo.T, preferred_element_type=jnp.float32)
+    acc_ref[...] += jnp.dot(x_hi, w_hi.T, preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("blocks", "interpret"))
+def q4_matmul_pallas(
+    x: jax.Array,
+    qw: QuantizedLinear,
+    *,
+    blocks: tuple[int, int, int] = DEFAULT_BLOCKS,
+    interpret: bool = False,
+) -> jax.Array:
+    """``x`` (M, K) f32/bf16 x Q4_0 (N, K) -> (M, N) in x.dtype."""
+    m, k = x.shape
+    n = qw.packed.shape[0]
+    if qw.packed.shape[1] * 2 != k:
+        raise ValueError("K mismatch between x and packed weights")
+    bm, bn, bk = blocks
+    if bk % GROUP:
+        raise ValueError(f"bk={bk} must be a multiple of {GROUP}")
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"shape ({m},{n},{k}) not divisible by blocks {blocks}")
+    return pl.pallas_call(
+        _kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk // 2), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, bk // GROUP), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(x, qw.packed, qw.scales)

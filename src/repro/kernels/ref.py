@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (ground truth for allclose)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.q4 import QuantizedLinear, dequantize_q4_0
+from repro.quant.int8 import (
+    QuantizedActivation,
+    QuantizedWeightI8,
+    u8s8_matmul_decompose,
+)
+
+
+def int8_gemm_ref(a_u8: jax.Array, w_s8: jax.Array) -> jax.Array:
+    """u8 (M,K) x s8 (N,K) -> s32 (M,N): raw VNNI/MXU accumulation."""
+    return jnp.dot(
+        a_u8.astype(jnp.int32), w_s8.astype(jnp.int32).T,
+        preferred_element_type=jnp.int32,
+    )
+
+
+def int8_gemm_f32_ref(a: QuantizedActivation, w: QuantizedWeightI8) -> jax.Array:
+    """Full quantized linear: u8s8 accumulation + dequant to f32."""
+    acc = int8_gemm_ref(a.q, w.q)
+    return u8s8_matmul_decompose(a, w, acc)
+
+
+def q4_matmul_ref(x: jax.Array, qw: QuantizedLinear) -> jax.Array:
+    """f32/bf16 (M,K) x Q4_0 (N,K) -> (M,N): dequantize-then-matmul.
+
+    This is the paper's "Fp32-Int4-Fp32" GEMV/GEMM path (weights dequantized
+    group-wise; activations stay float).
+    """
+    w = dequantize_q4_0(qw, dtype=jnp.float32)
+    return jnp.dot(x.astype(jnp.float32), w.T,
+                   preferred_element_type=jnp.float32).astype(x.dtype)

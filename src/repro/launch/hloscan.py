@@ -1,0 +1,96 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""HLO inspection for §Perf iteration: top collectives (trip-multiplied)
+and largest tensors in a cell's compiled module.
+
+  python -m repro.launch.hloscan --arch granite-8b --shape train_4k
+"""
+
+import argparse
+import re
+import sys
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.sharding.specs import activation_sharding
+from repro.launch.roofline import (
+    _COLLECTIVES,
+    _entry_name,
+    _group_size,
+    _shape_bytes,
+    _split_computations,
+    _trip_count,
+    _wire_factor,
+)
+
+
+def scan(hlo: str, default_group: int, top: int = 15):
+    comps = _split_computations(hlo)
+    entry = _entry_name(hlo, comps)
+    colls = []
+    big = []
+
+    def walk(name, mult, depth=0):
+        if depth > 12 or name not in comps:
+            return
+        for line in comps[name]:
+            m = re.search(r"=\s*(\([^)]*\)|[\w\[\],{}\/]+)\s+([\w\-]+)", line)
+            if m:
+                kind = m.group(2)
+                base = kind.replace("-start", "")
+                nbytes = _shape_bytes(m.group(1))
+                if base in _COLLECTIVES and not kind.endswith("-done"):
+                    n = _group_size(line, default_group)
+                    wire = nbytes * _wire_factor(base, n) * mult
+                    colls.append((wire, base, n, mult, m.group(1)[:90],
+                                  line[:60]))
+                elif nbytes > 256 * 1024 * 1024:
+                    big.append((nbytes, kind, m.group(1)[:90]))
+            wm = re.search(
+                r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)",
+                line)
+            if wm:
+                trips = _trip_count(comps.get(wm.group(1), []))
+                walk(wm.group(2), mult * trips, depth + 1)
+
+    walk(entry, 1.0)
+    colls.sort(reverse=True)
+    big.sort(reverse=True)
+    print("== top collectives (wire bytes x trips, per device) ==")
+    for wire, base, n, mult, t, line in colls[:top]:
+        print(f"{wire/1e9:10.2f} GB  {base:18} group={n:3} trips={mult:6.0f} {t}")
+    print("== largest single tensors ==")
+    seen = set()
+    for nbytes, kind, t in big[:top]:
+        key = (kind, t)
+        if key in seen:
+            continue
+        seen.add(key)
+        print(f"{nbytes/1e9:10.2f} GB  {kind:22} {t}")
+    total = sum(c[0] for c in colls)
+    print(f"total wire: {total/1e9:.1f} GB -> t_coll={total/50e9:.3f}s")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    fn, fargs, in_sh = build_cell(cfg, shape, mesh)
+    with mesh, activation_sharding(mesh):
+        compiled = jax.jit(fn, in_shardings=in_sh).lower(*fargs).compile()
+    import math
+    scan(compiled.as_text(), math.prod(mesh.devices.shape), args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,340 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms, in seconds, per device (the compiled module after SPMD
+partitioning IS the per-device program):
+
+  compute    = HLO_FLOPs / peak_FLOPs            (197 TFLOP/s bf16, v5e)
+  memory     = HLO_bytes / HBM_bw                (819 GB/s)
+  collective = wire_bytes / ICI_bw               (~50 GB/s per link; we
+               conservatively charge a single link direction)
+
+``cost_analysis`` provides flops/bytes.  Collective bytes are NOT in
+cost_analysis: we parse the post-SPMD HLO text, find every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, take its
+output tensor bytes and apply the ring-algorithm wire factor per op kind
+and participant-group size.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+# v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12     # bf16
+HBM_BW = 819e9          # bytes/s
+ICI_BW = 50e9           # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of possibly-tuple HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    """Participants per replica group.
+
+    Handles ``replica_groups={{0,1,2,3},{...}}`` and the iota form
+    ``replica_groups=[8,32]<=[256]`` (8 groups of 32).
+    """
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(1, len(ids))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return max(1, int(m.group(2)))
+    return default
+
+
+def _wire_factor(kind: str, n: int) -> float:
+    """Ring-algorithm wire bytes per device, as a multiple of the op's
+    output bytes."""
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if kind == "all-gather":
+        return (n - 1) / n
+    if kind == "reduce-scatter":
+        return (n - 1)  # output is 1/n of the input that moves
+    if kind == "all-to-all":
+        return (n - 1) / n
+    if kind == "collective-permute":
+        return 1.0
+    return 1.0
+
+
+@dataclass
+class CollectiveStats:
+    ops: dict = field(default_factory=dict)       # kind -> count
+    raw_bytes: dict = field(default_factory=dict)  # kind -> output bytes
+    wire_bytes: float = 0.0
+    # TPU-adjusted wire: the CPU backend computes bf16 dots in f32, so SPMD
+    # all-reduces of dot partials appear as f32 even though the pre-SPMD
+    # StableHLO is bf16 (verified) — a TPU backend moves those bytes in
+    # bf16.  f32 dot-produced ARs are therefore halved in this metric.
+    wire_bytes_tpu: float = 0.0
+
+    def add(self, kind: str, nbytes: int, n: int, mult: float = 1.0,
+            f32_dot_artifact: bool = False) -> None:
+        self.ops[kind] = self.ops.get(kind, 0) + mult
+        self.raw_bytes[kind] = self.raw_bytes.get(kind, 0) + nbytes * mult
+        wire = nbytes * _wire_factor(kind, n) * mult
+        self.wire_bytes += wire
+        self.wire_bytes_tpu += wire * (0.5 if f32_dot_artifact else 1.0)
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """computation name -> its body lines (post-SPMD HLO text)."""
+    comps: dict[str, list[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo_text.splitlines():
+        clean = re.sub(r"/\*.*?\*/", "", line)  # strip /*index=N*/ comments
+        m = re.match(r"\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", clean)
+        is_header = (
+            m is not None
+            and clean.rstrip().endswith("{")
+            and "=" not in clean.split("(", 1)[0]
+        )
+        if is_header:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line.strip())
+    return comps
+
+
+def _entry_name(hlo_text: str, comps: dict) -> Optional[str]:
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo_text)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    # fall back: computation named like main
+    for name in comps:
+        if "main" in name:
+            return name
+    return next(iter(comps), None)
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Scan-lowered loop conditions compare the induction var against a
+    constant; take the largest integer constant in the condition body."""
+    best = 1
+    for line in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def parse_collectives(hlo_text: str, default_group: int) -> CollectiveStats:
+    """Collective wire bytes with while-loop trip attribution.
+
+    XLA's cost analysis (and a naive text scan) counts a while body ONCE;
+    scan-over-layers/microbatches would undercount collectives by the trip
+    count.  We walk the call graph from ENTRY, multiplying by parsed trip
+    counts at each ``while``.
+    """
+    comps = _split_computations(hlo_text)
+    entry = _entry_name(hlo_text, comps)
+    stats = CollectiveStats()
+    if entry is None:
+        return stats
+
+    def walk(name: str, mult: float, depth: int = 0) -> None:
+        if depth > 12 or name not in comps:
+            return
+        for line in comps[name]:
+            m = re.search(r"=\s*(\([^)]*\)|[\w\[\],{}\/]+)\s+([\w\-]+)", line)
+            if m:
+                kind = m.group(2)
+                base = kind.replace("-start", "")
+                if base in _COLLECTIVES and not kind.endswith("-done"):
+                    nbytes = _shape_bytes(m.group(1))
+                    n = _group_size(line, default_group)
+                    artifact = (base in ("all-reduce", "all-gather")
+                                and "f32[" in m.group(1)
+                                and "dot" in line)
+                    stats.add(base, nbytes, n, mult, artifact)
+                    continue
+            wm = re.search(r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)",
+                           line)
+            if not wm:
+                wm2 = re.search(r"body=%?([\w.\-]+).*?condition=%?([\w.\-]+)", line)
+                if wm2 and "while(" in line:
+                    cond_name, body_name = wm2.group(2), wm2.group(1)
+                else:
+                    cond_name = body_name = None
+            else:
+                cond_name, body_name = wm.group(1), wm.group(2)
+            if body_name:
+                trips = _trip_count(comps.get(cond_name, []))
+                walk(body_name, mult * trips, depth + 1)
+                continue
+            cm = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", line)
+            if cm and "fused" not in cm.group(1):
+                walk(cm.group(1), mult, depth + 1)
+
+    walk(entry, 1.0)
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops: float              # analytic, per device (primary)
+    hbm_bytes: float          # analytic, per device (primary)
+    wire_bytes: float         # HLO-parsed with while-trip attribution
+    per_device_output_bytes: float
+    model_flops: float
+    wire_bytes_tpu: float = 0.0  # f32-dot-AR artifact halved (see parse)
+    collective_ops: dict = field(default_factory=dict)
+    hlo_flops_raw: float = 0.0   # body-once HLO numbers (lower bound)
+    hlo_bytes_raw: float = 0.0
+    peak_mem_bytes: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes / ICI_BW
+
+    @property
+    def t_collective_tpu(self) -> float:
+        return self.wire_bytes_tpu / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (per device): remat/dispatch overhead."""
+        if self.flops <= 0:
+            return 0.0
+        return self.model_flops / self.flops
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable fraction of the compute roofline if the dominant term
+        were perfectly overlapped: t_compute / t_bound."""
+        if self.t_bound <= 0:
+            return 0.0
+        return self.t_compute / self.t_bound
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "wire_bytes": self.wire_bytes,
+            "wire_bytes_tpu": self.wire_bytes_tpu,
+            "t_collective_tpu": self.t_collective_tpu,
+            "collective_ops": self.collective_ops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+            "hlo_flops_raw": self.hlo_flops_raw,
+            "hlo_bytes_raw": self.hlo_bytes_raw,
+            "peak_mem_bytes": self.peak_mem_bytes,
+            "per_device_output_bytes": self.per_device_output_bytes,
+        }
+
+
+def model_flops_per_device(cfg, shape_spec, n_devices: int) -> float:
+    """MODEL_FLOPS: 6*N_active*D for training, 2*N_active*D for inference
+    forward (D = tokens processed), divided across devices."""
+    n_active = cfg.active_param_count()
+    if shape_spec.kind == "train":
+        tokens = shape_spec.batch * shape_spec.seq
+        total = 6.0 * n_active * tokens
+    elif shape_spec.kind == "prefill":
+        tokens = shape_spec.batch * shape_spec.seq
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape_spec.batch
+    return total / n_devices
+
+
+def analyze(compiled, *, arch: str, shape, mesh, cfg) -> Roofline:
+    from .analytic import analyze_cell
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    hlo_flops = float(cost.get("flops", 0.0))
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))
+    n_dev = math.prod(mesh.devices.shape)
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    stats = parse_collectives(hlo, default_group=n_dev)
+    mem = None
+    out_bytes = 0.0
+    try:
+        ma = compiled.memory_analysis()
+        mem = float(ma.temp_size_in_bytes + ma.argument_size_in_bytes +
+                    ma.output_size_in_bytes)
+        out_bytes = float(ma.output_size_in_bytes)
+    except Exception:
+        pass
+    ana = analyze_cell(cfg, shape, n_dev)
+    return Roofline(
+        arch=arch,
+        shape=shape.name,
+        mesh="x".join(str(s) for s in mesh.devices.shape),
+        flops=ana.flops,
+        hbm_bytes=ana.hbm_bytes,
+        wire_bytes=stats.wire_bytes,
+        wire_bytes_tpu=stats.wire_bytes_tpu,
+        collective_ops=stats.ops,
+        per_device_output_bytes=out_bytes,
+        model_flops=model_flops_per_device(cfg, shape, n_dev),
+        hlo_flops_raw=hlo_flops,
+        hlo_bytes_raw=hlo_bytes,
+        peak_mem_bytes=mem,
+    )

@@ -1,0 +1,21 @@
+"""Model zoo: composable mixers + trunk covering all assigned families."""
+
+from .transformer import (
+    init_params,
+    abstract_params,
+    init_state,
+    abstract_state,
+    forward,
+    loss_fn,
+    ForwardOut,
+)
+
+__all__ = [
+    "init_params",
+    "abstract_params",
+    "init_state",
+    "abstract_state",
+    "forward",
+    "loss_fn",
+    "ForwardOut",
+]

@@ -1,0 +1,149 @@
+"""GQA attention with rotary embeddings, KV cache, and query-chunking.
+
+Memory discipline: scores are never materialized for more than one query
+chunk at a time (``cfg.attn_chunk``) — a pure-JAX flash-attention analogue
+(the online-softmax Pallas kernel is a hillclimb candidate, see §Perf).
+GQA is computed in grouped form (no KV head repetition is materialized).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import _dense, apply_rope
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array    # (B, Hkv, S_max, hd)
+    v: jax.Array    # (B, Hkv, S_max, hd)
+    idx: jax.Array  # () int32 — number of valid positions
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, n_layers: int) -> list:
+    """Per-layer KV caches (only for layers whose mixer is 'attn';
+    non-attention layers get their own state objects)."""
+    shape = (batch, cfg.n_kv_heads, max_seq, cfg.hd)
+    return [
+        KVCache(
+            k=jnp.zeros(shape, cfg.cdtype),
+            v=jnp.zeros(shape, cfg.cdtype),
+            idx=jnp.zeros((), jnp.int32),
+        )
+        for _ in range(n_layers)
+    ]
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int) -> KVCache:
+    shape = (batch, cfg.n_kv_heads, max_seq, cfg.hd)
+    return KVCache(
+        k=jax.ShapeDtypeStruct(shape, cfg.cdtype),
+        v=jax.ShapeDtypeStruct(shape, cfg.cdtype),
+        idx=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def init_attn(cfg: ModelConfig, key) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.hd
+    dt = cfg.cdtype
+    p = {
+        "wq": _dense(k1, d, cfg.n_heads * hd, dt),
+        "wk": _dense(k2, d, cfg.n_kv_heads * hd, dt),
+        "wv": _dense(k3, d, cfg.n_kv_heads * hd, dt),
+        "wo": _dense(k4, cfg.n_heads * hd, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dt)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+    return p
+
+
+def _sdpa_grouped(q, k, v, q_pos, kv_pos, kv_len) -> jax.Array:
+    """Grouped scaled-dot-product attention on one query chunk.
+
+    q: (B, Hkv, G, Sq, hd);  k, v: (B, Hkv, Skv, hd)
+    q_pos: (B, Sq) global query positions; kv_pos: (Skv,);
+    kv_len: () number of valid kv entries (cache may be partially filled).
+    """
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum(
+        "bhgqd,bhsd->bhgqs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    allowed = (kv_pos[None, :] <= q_pos[..., None]) & (kv_pos[None, :] < kv_len)
+    scores = jnp.where(allowed[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqs,bhsd->bhgqd", probs, v.astype(jnp.float32))
+    return out.astype(v.dtype)
+
+
+def attn_fwd(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: Optional[KVCache] = None,
+) -> tuple[jax.Array, Optional[KVCache]]:
+    """x: (B, S, d); positions: (B, S) global positions of these tokens.
+
+    Without cache: plain causal self-attention (training).
+    With cache: appends this chunk's K/V at ``cache.idx`` (prefill writes a
+    block, decode writes one token) and attends over everything valid.
+    """
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = hq // hkv
+
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, hq, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+
+    q = apply_rope(q, positions, theta=cfg.rope_theta, fraction=cfg.rope_fraction)
+    k = apply_rope(k, positions, theta=cfg.rope_theta, fraction=cfg.rope_fraction)
+
+    if cache is not None:
+        k_all = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                             (0, 0, cache.idx, 0))
+        v_all = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                             (0, 0, cache.idx, 0))
+        new_cache = KVCache(k=k_all, v=v_all, idx=cache.idx + s)
+        kv_pos = jnp.arange(k_all.shape[2])
+        kv_len = cache.idx + s
+    else:
+        k_all, v_all = k, v
+        new_cache = None
+        kv_pos = jnp.arange(s)
+        kv_len = jnp.asarray(s)
+
+    qg = q.reshape(b, hkv, g, s, hd)
+    if positions.ndim == 1:
+        positions = jnp.broadcast_to(positions[None, :], (b, s))
+
+    chunk = cfg.attn_chunk
+    if s <= chunk or s % chunk:
+        out = _sdpa_grouped(qg, k_all, v_all, positions, kv_pos, kv_len)
+    else:
+        n_chunks = s // chunk
+        qc = qg.reshape(b, hkv, g, n_chunks, chunk, hd).transpose(3, 0, 1, 2, 4, 5)
+        pc = positions.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+        def body(carry, inp):
+            qi, pi = inp
+            return carry, _sdpa_grouped(qi, k_all, v_all, pi, kv_pos, kv_len)
+
+        _, outs = jax.lax.scan(body, None, (qc, pc))
+        out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv, g, s, hd)
+
+    out = out.reshape(b, hq, s, hd).transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+    return (out @ p["wo"]).astype(x.dtype), new_cache

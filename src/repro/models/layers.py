@@ -1,0 +1,115 @@
+"""Shared building blocks: norms, MLPs, embeddings, rotary embeddings.
+
+Parameters are plain dict pytrees; every ``init_*`` has matching
+``fwd_*`` so stages can be stacked and scanned.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def _norm_init(cfg: ModelConfig, key) -> dict:
+    d = cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"w": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        return {"w": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+    if cfg.norm == "nonparam_ln":  # olmo: no affine parameters
+        return {}
+    raise ValueError(cfg.norm)
+
+
+def norm_fwd(cfg: ModelConfig, p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        return (xf * p["w"]).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if cfg.norm == "layernorm":
+        xf = xf * p["w"] + p["b"]
+    return xf.astype(x.dtype)
+
+
+def _dense(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def init_mlp(cfg: ModelConfig, key) -> dict:
+    dt = cfg.cdtype
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp == "swiglu":
+        return {
+            "wi": _dense(k1, d, f, dt),
+            "wg": _dense(k2, d, f, dt),
+            "wo": _dense(k3, f, d, dt),
+        }
+    if cfg.mlp == "gelu":
+        return {"wi": _dense(k1, d, f, dt), "wo": _dense(k3, f, d, dt)}
+    raise ValueError(cfg.mlp)
+
+
+def mlp_fwd(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    else:  # gelu
+        h = jax.nn.gelu(x @ p["wi"])
+    return h @ p["wo"]
+
+
+def init_embedding(cfg: ModelConfig, key) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"tok": (jax.random.normal(k1, (cfg.vocab_size, cfg.d_model)) * 0.02
+                 ).astype(cfg.cdtype)}
+    if not cfg.tie_embeddings:
+        p["out"] = _dense(k2, cfg.d_model, cfg.vocab_size, cfg.cdtype)
+    return p
+
+
+def embed_fwd(cfg: ModelConfig, p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def logits_fwd(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    w = p["tok"].T if cfg.tie_embeddings else p["out"]
+    return (x @ w).astype(jnp.float32)
+
+
+# ----------------------------------------------------------------- rotary --
+def rope_angles(positions: jax.Array, dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions (...,) -> cos/sin (..., dim//2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, theta: float,
+               fraction: float = 1.0) -> jax.Array:
+    """x (B, H, S, hd); positions (B, S) or (S,).
+
+    ``fraction < 1`` rotates only the first ``fraction * hd`` dims
+    (ChatGLM-style 2D rope: half the head is positional, half is not).
+    """
+    hd = x.shape[-1]
+    rot = int(hd * fraction)
+    rot -= rot % 2
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    cos, sin = rope_angles(positions, rot, theta)  # (B, S, rot/2)
+    cos = cos[:, None, :, :]
+    sin = sin[:, None, :, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr, xp], axis=-1).astype(x.dtype) if rot < hd else yr.astype(x.dtype)

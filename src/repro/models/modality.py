@@ -1,0 +1,37 @@
+"""Modality-frontend STUBS for backbone-only assigned architectures.
+
+Per the assignment, [vlm]/[audio] entries specify the transformer backbone
+only; the frontend (InternViT vision tower, EnCodec audio codec) is a stub:
+``input_specs()`` provides precomputed patch/frame embeddings with the right
+shapes/dtypes, and the helpers here generate concrete stand-ins for smoke
+tests and examples.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def vlm_prefix_spec(cfg: ModelConfig, batch: int) -> jax.ShapeDtypeStruct:
+    """Precomputed vision-patch embeddings (InternViT output, projected)."""
+    return jax.ShapeDtypeStruct((batch, cfg.n_prefix, cfg.d_model), cfg.cdtype)
+
+
+def vlm_prefix_stub(cfg: ModelConfig, batch: int, key=None) -> jax.Array:
+    key = jax.random.key(0) if key is None else key
+    return (jax.random.normal(key, (batch, cfg.n_prefix, cfg.d_model)) * 0.02
+            ).astype(cfg.cdtype)
+
+
+def audio_frame_spec(cfg: ModelConfig, batch: int, seq: int) -> jax.ShapeDtypeStruct:
+    """Precomputed EnCodec frame embeddings (sum of codebook embeddings)."""
+    return jax.ShapeDtypeStruct((batch, seq, cfg.d_model), cfg.cdtype)
+
+
+def audio_frame_stub(cfg: ModelConfig, batch: int, seq: int, key=None) -> jax.Array:
+    key = jax.random.key(1) if key is None else key
+    return (jax.random.normal(key, (batch, seq, cfg.d_model)) * 0.02
+            ).astype(cfg.cdtype)

@@ -1,0 +1,254 @@
+"""Model trunk: composes mixers (attn/mamba/mlstm/slstm) + FFNs (dense/moe)
+into the per-architecture layer plan, scanning over repeated periods.
+
+Compile-time discipline: layers are grouped into the smallest repeating
+(mixer, ffn) *period* (see ``ModelConfig.period``); parameters of each
+period position are stacked over repeats and the trunk is a single
+``lax.scan`` whose body applies one period.  A 72-layer jamba therefore
+lowers as one 8-layer body — HLO size and compile time stay bounded across
+the whole zoo.
+
+States (KV caches / SSM / xLSTM states) follow the same stacking so that
+prefill/decode scan over the same structure.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.specs import constrain, constrain_tree
+from . import attention as A
+from . import moe as M
+from . import ssm as S
+from . import xlstm as X
+from .layers import (
+    _norm_init,
+    embed_fwd,
+    init_embedding,
+    init_mlp,
+    logits_fwd,
+    mlp_fwd,
+    norm_fwd,
+)
+
+MIXER_INIT = {
+    "attn": A.init_attn,
+    "mamba": S.init_mamba,
+    "mlstm": X.init_mlstm,
+    "slstm": X.init_slstm,
+}
+
+
+def _init_layer(cfg: ModelConfig, key, mixer: str, ffn: str) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: dict[str, Any] = {
+        "norm1": _norm_init(cfg, k1),
+        "mixer": MIXER_INIT[mixer](cfg, k2),
+    }
+    if ffn != "none":
+        p["norm2"] = _norm_init(cfg, k3)
+        p["ffn"] = M.init_moe(cfg, k4) if ffn == "moe" else init_mlp(cfg, k4)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    """Returns {"embed": ..., "period": [stacked per-position params],
+    "final_norm": ...}."""
+    period = cfg.period()
+    n_rep = cfg.n_periods
+    keys = jax.random.split(key, n_rep * len(period) + 2)
+    stacked = []
+    for j, (mixer, ffn) in enumerate(period):
+        per_rep = [
+            _init_layer(cfg, keys[i * len(period) + j], mixer, ffn)
+            for i in range(n_rep)
+        ]
+        stacked.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep))
+    return {
+        "embed": init_embedding(cfg, keys[-2]),
+        "period": stacked,
+        "final_norm": _norm_init(cfg, keys[-1]),
+    }
+
+
+def abstract_params(cfg: ModelConfig, key=None) -> dict:
+    """ShapeDtypeStruct pytree (no allocation) — dry-run weights."""
+    k = jax.random.key(0) if key is None else key
+    return jax.eval_shape(lambda: init_params(cfg, k))
+
+
+# --------------------------------------------------------------- states ---
+def init_state(cfg: ModelConfig, batch: int, max_seq: int):
+    """Per-period-position stacked decoding state."""
+    period = cfg.period()
+    n_rep = cfg.n_periods
+    out = []
+    for mixer, _ in period:
+        if mixer == "attn":
+            one = lambda: A.KVCache(
+                k=jnp.zeros((batch, cfg.n_kv_heads, max_seq, cfg.hd), cfg.cdtype),
+                v=jnp.zeros((batch, cfg.n_kv_heads, max_seq, cfg.hd), cfg.cdtype),
+                idx=jnp.zeros((), jnp.int32),
+            )
+        elif mixer == "mamba":
+            one = lambda: S.init_mamba_state(cfg, batch)
+        elif mixer == "mlstm":
+            one = lambda: X.init_mlstm_state(cfg, batch)
+        elif mixer == "slstm":
+            one = lambda: X.init_slstm_state(cfg, batch)
+        else:
+            raise ValueError(mixer)
+        reps = [one() for _ in range(n_rep)]
+        out.append(jax.tree.map(lambda *xs: jnp.stack(xs), *reps))
+    return out
+
+
+def abstract_state(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.eval_shape(lambda: init_state(cfg, batch, max_seq))
+
+
+# -------------------------------------------------------------- forward ---
+class ForwardOut(NamedTuple):
+    logits: jax.Array
+    state: Any
+    aux: dict
+
+
+def _apply_layer(cfg, mixer, ffn, p, x, positions, state, capacity):
+    h = norm_fwd(cfg, p["norm1"], x)
+    if mixer == "attn":
+        mix, new_state = A.attn_fwd(cfg, p["mixer"], h, positions, state)
+    elif mixer == "mamba":
+        mix, new_state = S.mamba_fwd(cfg, p["mixer"], h, state)
+    elif mixer == "mlstm":
+        mix, new_state = X.mlstm_fwd(cfg, p["mixer"], h, state)
+    elif mixer == "slstm":
+        mix, new_state = X.slstm_fwd(cfg, p["mixer"], h, state)
+    else:
+        raise ValueError(mixer)
+    x = x + mix
+    aux = None
+    if ffn != "none":
+        h2 = norm_fwd(cfg, p["norm2"], x)
+        if ffn == "moe":
+            y, aux = M.moe_fwd(cfg, p["ffn"], h2, capacity)
+        else:
+            y = mlp_fwd(cfg, p["ffn"], h2)
+        x = x + y
+    return x, new_state, aux
+
+
+def forward(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: Optional[jax.Array] = None,
+    *,
+    embeds: Optional[jax.Array] = None,
+    prefix_embeds: Optional[jax.Array] = None,
+    state: Optional[list] = None,
+    pos_offset: jax.Array | int = 0,
+    capacity: Optional[int] = None,
+    logits_mode: str = "all",
+    remat: bool = False,
+) -> ForwardOut:
+    """Trunk forward.
+
+    tokens: (B, S) int32 — or ``embeds`` (B, S, d) for embed-input archs
+    (musicgen stub).  ``prefix_embeds`` (B, P, d) is prepended (internvl2
+    stub).  ``state`` enables prefill/decode (returned updated).
+    """
+    if embeds is not None:
+        x = embeds.astype(cfg.cdtype)
+    else:
+        x = embed_fwd(cfg, params["embed"], tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = constrain(x, ("dp", None, None))
+
+    b, s, _ = x.shape
+    positions = jnp.asarray(pos_offset) + jnp.arange(s)[None, :]
+    positions = jnp.broadcast_to(positions, (b, s))
+
+    period = cfg.period()
+    have_state = state is not None
+    moe_cfg = cfg.moe
+
+    def period_body(carry, xs):
+        x, lb, dropped = carry
+        p_stack, st_stack = xs
+        new_states = []
+        for j, (mixer, ffn) in enumerate(period):
+            st_j = st_stack[j] if have_state else None
+            x, new_st, aux = _apply_layer(
+                cfg, mixer, ffn, p_stack[j], x, positions, st_j, capacity
+            )
+            # anchor sharding propagation inside the while body (GSPMD does
+            # not reliably propagate through scan+remat)
+            x = constrain(x, ("dp", None, None))
+            new_states.append(new_st if have_state else st_j)
+            if aux is not None:
+                lb = lb + aux["lb_loss"]
+                dropped = dropped + aux["dropped"]
+        return (x, lb, dropped), (new_states if have_state else 0)
+
+    carry0 = (x, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+    xs = (params["period"], state if have_state else jnp.zeros((cfg.n_periods,)))
+    body = jax.checkpoint(period_body) if remat else period_body
+    (x, lb, dropped), new_state = jax.lax.scan(body, carry0, xs)
+
+    if logits_mode == "last":
+        # Serving prefill: only the last position's logits are consumed;
+        # slicing *before* the (d x vocab) matmul avoids materializing a
+        # (B, S, V) tensor (53 GB/device for llama4 at prefill_32k).
+        x = x[:, -1:, :]
+    x = norm_fwd(cfg, params["final_norm"], x)
+    logits = logits_fwd(cfg, params["embed"], x)
+    logits = constrain(logits, ("dp", None, "tp"))
+    n_moe = max(1, sum(1 for _, f in cfg.layer_plan() if f == "moe"))
+    aux = {"lb_loss": lb / n_moe, "dropped": dropped / n_moe}
+    return ForwardOut(logits=logits, state=new_state if have_state else None, aux=aux)
+
+
+def loss_fn(
+    cfg: ModelConfig,
+    params: dict,
+    batch: dict,
+    *,
+    lb_coef: float = 0.01,
+    capacity: Optional[int] = None,
+    remat: bool = False,
+) -> tuple[jax.Array, dict]:
+    """Next-token cross-entropy (+ MoE load-balance loss).
+
+    batch: {"tokens": (B,S), "labels": (B,S) with -100 = ignore} and
+    optionally "embeds"/"prefix_embeds" for stub-frontend archs.
+    """
+    out = forward(
+        cfg,
+        params,
+        batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        prefix_embeds=batch.get("prefix_embeds"),
+        capacity=capacity,
+        remat=remat,
+    )
+    labels = batch["labels"]
+    logits = out.logits
+    if logits.shape[1] != labels.shape[1]:  # prefix positions carry no loss
+        logits = logits[:, logits.shape[1] - labels.shape[1]:, :]
+    valid = labels != -100
+    safe = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(valid.sum(), 1)
+    ce = jnp.where(valid, nll, 0.0).sum() / denom
+    total = ce + lb_coef * out.aux["lb_loss"]
+    metrics = {"loss": total, "ce": ce, "lb": out.aux["lb_loss"],
+               "dropped": out.aux["dropped"]}
+    return total, metrics

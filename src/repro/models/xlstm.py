@@ -1,0 +1,324 @@
+"""xLSTM mixers: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM uses the stabilized exponential-gating recurrence of arXiv:2405.04517:
+
+    m_t = max(f~_t + m_{t-1}, i~_t)
+    C_t = e^{f~+m_{t-1}-m_t} C_{t-1} + e^{i~-m_t} v_t k_t^T
+    n_t = e^{f~+m_{t-1}-m_t} n_{t-1} + e^{i~-m_t} k_t
+    h_t = C_t q_t / max(|n_t . q_t|, e^{-m_t})
+
+Training/prefill runs the *chunkwise-parallel* form (intra-chunk attention-
+like matrix + inter-chunk state carry), scanned over chunks with remat —
+O(B * L^2) transients instead of a length-T serial scan, which is what makes
+seq-4096 training of xlstm-1.3b feasible.  ``mlstm_recurrent_reference``
+is the exact step recurrence used by unit tests and by decode.
+
+sLSTM has true recurrent weights (block-diagonal per head) and cannot be
+parallelized over time; it scans with chunk-level checkpointing.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+NEG = -1e30
+
+
+# =============================================================== mLSTM ====
+class MLSTMState(NamedTuple):
+    c: jax.Array   # (B, H, dv, dk) stabilized matrix memory
+    n: jax.Array   # (B, H, dk)
+    m: jax.Array   # (B, H)
+    conv: jax.Array  # (B, d_conv-1, di) causal-conv tail
+
+
+def mlstm_dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    x = cfg.xlstm
+    di = int(x.proj_factor * cfg.d_model)
+    h = cfg.n_heads
+    dv = di // h
+    dk = max(8, int(x.qk_dim_factor * dv))
+    return di, h, dv, dk
+
+
+def init_mlstm(cfg: ModelConfig, key) -> dict:
+    di, h, dv, dk = mlstm_dims(cfg)
+    d = cfg.d_model
+    dt = cfg.cdtype
+    ks = jax.random.split(key, 9)
+    x = cfg.xlstm
+    return {
+        "w_up": (jax.random.normal(ks[0], (d, di)) * d ** -0.5).astype(dt),
+        "w_z": (jax.random.normal(ks[1], (d, di)) * d ** -0.5).astype(dt),
+        "conv_w": (jax.random.normal(ks[2], (x.conv_kernel, di)) * x.conv_kernel ** -0.5).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        # per-head block-diagonal projections (official xLSTM layout)
+        "wq": (jax.random.normal(ks[3], (h, dv, dk)) * dv ** -0.5).astype(dt),
+        "wk": (jax.random.normal(ks[4], (h, dv, dk)) * dv ** -0.5).astype(dt),
+        "wv": (jax.random.normal(ks[5], (h, dv, dv)) * dv ** -0.5).astype(dt),
+        "w_if": (jax.random.normal(ks[6], (di, 2 * h)) * di ** -0.5).astype(jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((h,)), 3.0 * jnp.ones((h,))]).astype(jnp.float32),
+        "w_down": (jax.random.normal(ks[7], (di, d)) * di ** -0.5).astype(dt),
+    }
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    di, h, dv, dk = mlstm_dims(cfg)
+    return MLSTMState(
+        c=jnp.zeros((batch, h, dv, dk), jnp.float32),
+        n=jnp.zeros((batch, h, dk), jnp.float32),
+        m=jnp.full((batch, h), NEG, jnp.float32),
+        conv=jnp.zeros((batch, cfg.xlstm.conv_kernel - 1, di), cfg.cdtype),
+    )
+
+
+def _headwise_rms(h: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Non-parametric per-head RMS norm (stand-in for HeadwiseLayerNorm)."""
+    return h * jax.lax.rsqrt(jnp.mean(h * h, -1, keepdims=True) + eps)
+
+
+def _mlstm_chunk(q, k, v, ig, fg, state):
+    """One chunk of the chunkwise-parallel mLSTM.
+
+    q,k: (B,H,L,dk) (q pre-scaled); v: (B,H,L,dv); ig,fg: (B,H,L) f32.
+    state: (c (B,H,dv,dk), n (B,H,dk), m (B,H)).
+    Returns h (B,H,L,dv) and the end-of-chunk state.
+    """
+    c0, n0, m0 = state
+    b = jnp.cumsum(fg, axis=-1)                       # (B,H,L) log forget cum
+    # D_ts = ig_s + b_t - b_s  (s <= t)
+    dmat = ig[:, :, None, :] + b[:, :, :, None] - b[:, :, None, :]
+    l = q.shape[2]
+    causal = jnp.tril(jnp.ones((l, l), bool))
+    dmat = jnp.where(causal, dmat, NEG)
+    m_intra = dmat.max(-1)                            # (B,H,L)
+    m_t = jnp.maximum(m0[:, :, None] + b, m_intra)    # (B,H,L)
+
+    w = jnp.exp(dmat - m_t[..., None])                # (B,H,L,L)
+    s = jnp.einsum("bhld,bhsd->bhls", q, k)           # (B,H,L,L) f32
+    intra = jnp.einsum("bhls,bhsv->bhlv", w * s, v)
+    inter_coef = jnp.exp(m0[:, :, None] + b - m_t)    # (B,H,L)
+    inter = jnp.einsum("bhld,bhvd->bhlv", q, c0) * inter_coef[..., None]
+    num = inter + intra
+
+    den_intra = jnp.einsum("bhls,bhls->bhl", w, s)
+    den_inter = jnp.einsum("bhld,bhd->bhl", q, n0) * inter_coef
+    den = den_inter + den_intra
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+    # end-of-chunk state
+    bl = b[:, :, -1]                                  # (B,H)
+    m_end = jnp.maximum(m0 + bl, (ig + bl[..., None] - b).max(-1))
+    wk_end = jnp.exp(ig + bl[..., None] - b - m_end[..., None])  # (B,H,L)
+    c_new = jnp.exp(m0 + bl - m_end)[..., None, None] * c0 + jnp.einsum(
+        "bhl,bhlv,bhld->bhvd", wk_end, v, k
+    )
+    n_new = jnp.exp(m0 + bl - m_end)[..., None] * n0 + jnp.einsum(
+        "bhl,bhld->bhd", wk_end, k
+    )
+    return h, (c_new, n_new, m_end)
+
+
+def mlstm_step(q, k, v, ig, fg, state):
+    """Exact stabilized recurrence for ONE step (decode + reference).
+
+    q,k: (B,H,dk) (q pre-scaled); v: (B,H,dv); ig,fg: (B,H).
+    """
+    c0, n0, m0 = state
+    m_t = jnp.maximum(fg + m0, ig)
+    f_p = jnp.exp(fg + m0 - m_t)
+    i_p = jnp.exp(ig - m_t)
+    c_t = f_p[..., None, None] * c0 + i_p[..., None, None] * jnp.einsum(
+        "bhv,bhd->bhvd", v, k
+    )
+    n_t = f_p[..., None] * n0 + i_p[..., None] * k
+    num = jnp.einsum("bhvd,bhd->bhv", c_t, q)
+    den = jnp.einsum("bhd,bhd->bh", n_t, q)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+    return h, (c_t, n_t, m_t)
+
+
+def mlstm_recurrent_reference(q, k, v, ig, fg, state):
+    """Step-by-step over time (oracle for the chunkwise form).
+
+    q,k: (B,H,L,dk); returns (h (B,H,L,dv), final state).
+    """
+    def body(st, inp):
+        qt, kt, vt, it_, ft = inp
+        h, st2 = mlstm_step(qt, kt, vt, it_, ft, st)
+        return st2, h
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (q, k, v, ig, fg))
+    st, hs = jax.lax.scan(body, state, xs)
+    return jnp.moveaxis(hs, 0, 2), st
+
+
+def _mlstm_causal_conv(cfg, p, u, prev):
+    kk = cfg.xlstm.conv_kernel
+    if prev is None:
+        prev = jnp.zeros((u.shape[0], kk - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([prev, u], axis=1)
+    out = sum(
+        ext[:, i: i + u.shape[1], :] * p["conv_w"][i][None, None, :]
+        for i in range(kk)
+    ) + p["conv_b"]
+    return jax.nn.silu(out), ext[:, -(kk - 1):, :]
+
+
+def mlstm_fwd(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    state: Optional[MLSTMState] = None,
+) -> tuple[jax.Array, Optional[MLSTMState]]:
+    """x: (B, S, d) -> (out, new_state)."""
+    di, nh, dv, dk = mlstm_dims(cfg)
+    b_sz, s_len, _ = x.shape
+
+    u = x @ p["w_up"]
+    z = x @ p["w_z"]
+    uc, new_conv = _mlstm_causal_conv(cfg, p, u, state.conv if state else None)
+
+    uc_h = uc.reshape(b_sz, s_len, nh, dv)
+    u_h = u.reshape(b_sz, s_len, nh, dv)
+    q = jnp.einsum("bshd,hdk->bhsk", uc_h, p["wq"]).astype(jnp.float32) * dk ** -0.5
+    k = jnp.einsum("bshd,hdk->bhsk", uc_h, p["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bshd,hdk->bhsk", u_h, p["wv"]).astype(jnp.float32)
+    gates = uc.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    ig = gates[..., :nh].transpose(0, 2, 1)               # (B,H,S)
+    fg = jax.nn.log_sigmoid(gates[..., nh:]).transpose(0, 2, 1)
+
+    if state is not None:
+        st = (state.c, state.n, state.m)
+    else:
+        st = (
+            jnp.zeros((b_sz, nh, dv, dk), jnp.float32),
+            jnp.zeros((b_sz, nh, dk), jnp.float32),
+            jnp.full((b_sz, nh), NEG, jnp.float32),
+        )
+
+    chunk = min(cfg.xlstm.chunk, s_len)
+    if s_len % chunk:
+        chunk = s_len
+    if s_len == chunk:
+        h, st_out = _mlstm_chunk(q, k, v, ig, fg, st)
+    else:
+        nc = s_len // chunk
+
+        def reshape_chunks(a):  # (B,H,S,...) -> (nc, B,H,L,...)
+            return jnp.moveaxis(
+                a.reshape(a.shape[0], a.shape[1], nc, chunk, *a.shape[3:]), 2, 0
+            )
+
+        xs = tuple(reshape_chunks(a) for a in (q, k, v, ig, fg))
+
+        def body(carry, inp):
+            h_c, carry2 = _mlstm_chunk(*inp, carry)
+            return carry2, h_c
+
+        st_out, hs = jax.lax.scan(jax.checkpoint(body), st, xs)
+        h = jnp.moveaxis(hs, 0, 2).reshape(b_sz, nh, s_len, dv)
+
+    h = _headwise_rms(h)
+    h = h.transpose(0, 2, 1, 3).reshape(b_sz, s_len, di).astype(x.dtype)
+    out = (h * jax.nn.silu(z)) @ p["w_down"]
+    new_state = (
+        MLSTMState(c=st_out[0], n=st_out[1], m=st_out[2], conv=new_conv)
+        if state is not None
+        else None
+    )
+    return out, new_state
+
+
+# =============================================================== sLSTM ====
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, d)
+    n: jax.Array  # (B, d)
+    m: jax.Array  # (B, d)
+    h: jax.Array  # (B, d)
+
+
+def init_slstm(cfg: ModelConfig, key) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    dt = cfg.cdtype
+    ks = jax.random.split(key, 4)
+    return {
+        # fused gate projections: z, i, f, o
+        "w_x": (jax.random.normal(ks[0], (d, 4 * d)) * d ** -0.5).astype(dt),
+        "r_h": (jax.random.normal(ks[1], (nh, dh, 4 * dh)) * dh ** -0.5).astype(jnp.float32),
+        "bias": jnp.concatenate(
+            [jnp.zeros((2 * d,)), 3.0 * jnp.ones((d,)), jnp.zeros((d,))]
+        ).astype(jnp.float32),
+        "w_out": (jax.random.normal(ks[2], (d, d)) * d ** -0.5).astype(dt),
+    }
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z + 1e-6, m=jnp.full((batch, d), NEG), h=z)
+
+
+def slstm_step(cfg: ModelConfig, p: dict, xt: jax.Array, st: SLSTMState):
+    """One recurrent step. xt: (B, d) pre-projected gate input (B, 4d)."""
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    b = xt.shape[0]
+    hh = st.h.reshape(b, nh, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hh, p["r_h"]).reshape(b, 4 * d)
+    g = xt.astype(jnp.float32) + rec + p["bias"]
+    zg, ig, fg, og = jnp.split(g, 4, axis=-1)
+    z = jnp.tanh(zg)
+    fg = jax.nn.log_sigmoid(fg)
+    m_t = jnp.maximum(fg + st.m, ig)
+    i_p = jnp.exp(ig - m_t)
+    f_p = jnp.exp(fg + st.m - m_t)
+    c_t = f_p * st.c + i_p * z
+    n_t = jnp.maximum(f_p * st.n + i_p, 1e-6)
+    h_t = jax.nn.sigmoid(og) * (c_t / n_t)
+    return SLSTMState(c=c_t, n=n_t, m=m_t, h=h_t)
+
+
+def slstm_fwd(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    state: Optional[SLSTMState] = None,
+) -> tuple[jax.Array, Optional[SLSTMState]]:
+    """x: (B, S, d) -> (out, new_state); chunk-checkpointed time scan."""
+    b_sz, s_len, d = x.shape
+    st0 = state if state is not None else init_slstm_state(cfg, b_sz)
+    xg = x @ p["w_x"]  # (B, S, 4d)
+
+    chunk = min(cfg.xlstm.chunk, s_len)
+    if s_len % chunk:
+        chunk = s_len
+
+    def step(st, xt):
+        st2 = slstm_step(cfg, p, xt, st)
+        return st2, st2.h
+
+    def chunk_body(st, xc):
+        return jax.lax.scan(step, st, xc)
+
+    if s_len == chunk:
+        st_out, hs = chunk_body(st0, jnp.moveaxis(xg, 1, 0))
+        h = jnp.moveaxis(hs, 0, 1)
+    else:
+        nc = s_len // chunk
+        xc = jnp.moveaxis(xg.reshape(b_sz, nc, chunk, 4 * d), 1, 0)  # (nc,B,L,4d)
+        xc = jnp.moveaxis(xc, 2, 1)  # (nc, L, B, 4d)
+        st_out, hs = jax.lax.scan(jax.checkpoint(chunk_body), st0, xc)
+        h = hs.reshape(s_len, b_sz, d).transpose(1, 0, 2)
+
+    out = (h.astype(x.dtype)) @ p["w_out"]
+    return out, (st_out if state is not None else None)

@@ -1,0 +1,35 @@
+"""Quantization substrate: Q4_0 weights (llama.cpp layout) + dynamic INT8."""
+
+from .q4 import (
+    GROUP,
+    BYTES_PER_ELEM,
+    QuantizedLinear,
+    quantize_q4_0,
+    dequantize_q4_0,
+    q4_0_abstract,
+)
+from .int8 import (
+    QuantizedActivation,
+    QuantizedWeightI8,
+    quantize_u8_dynamic,
+    dequantize_u8,
+    quantize_s8_symmetric,
+    dequantize_s8,
+    u8s8_matmul_decompose,
+)
+
+__all__ = [
+    "GROUP",
+    "BYTES_PER_ELEM",
+    "QuantizedLinear",
+    "quantize_q4_0",
+    "dequantize_q4_0",
+    "q4_0_abstract",
+    "QuantizedActivation",
+    "QuantizedWeightI8",
+    "quantize_u8_dynamic",
+    "dequantize_u8",
+    "quantize_s8_symmetric",
+    "dequantize_s8",
+    "u8s8_matmul_decompose",
+]

@@ -1,0 +1,77 @@
+"""Dynamic INT8 activation quantization (the paper's GEMM operands).
+
+The paper's INT8 GEMM uses unsigned-INT8 activations against signed-INT8
+weights (the AVX-VNNI ``vpdpbusd`` contract, which maps to the TPU MXU's
+s8xs8 path with a zero-point correction term).
+
+* Activations: per-row asymmetric u8 — scale + zero-point.
+* Weights: per-channel symmetric s8.
+
+``u8s8_matmul_decompose`` shows the standard zero-point algebra used by both
+the reference and the Pallas kernel:
+  y = (a_u8 - zp) @ w_s8^T * (sa * sw)
+    = (a_u8 @ w_s8^T - zp * colsum(w_s8)) * (sa * sw)
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QuantizedActivation(NamedTuple):
+    q: jax.Array      # uint8 (M, K)
+    scale: jax.Array  # float32 (M, 1)
+    zero: jax.Array   # int32 (M, 1) zero-point in u8 domain
+
+
+class QuantizedWeightI8(NamedTuple):
+    q: jax.Array      # int8 (N, K)
+    scale: jax.Array  # float32 (N,) per-output-channel
+
+
+def quantize_u8_dynamic(x: jax.Array) -> QuantizedActivation:
+    """Per-row asymmetric quantization to u8 (llama.cpp-style dynamic)."""
+    x = x.astype(jnp.float32)
+    xmin = jnp.min(x, axis=-1, keepdims=True)
+    xmax = jnp.max(x, axis=-1, keepdims=True)
+    scale = (xmax - xmin) / 255.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    zero = jnp.round(-xmin / scale)
+    q = jnp.clip(jnp.round(x / scale) + zero, 0, 255).astype(jnp.uint8)
+    return QuantizedActivation(q=q, scale=scale, zero=zero.astype(jnp.int32))
+
+
+def dequantize_u8(qa: QuantizedActivation) -> jax.Array:
+    return (qa.q.astype(jnp.float32) - qa.zero.astype(jnp.float32)) * qa.scale
+
+
+def quantize_s8_symmetric(w: jax.Array) -> QuantizedWeightI8:
+    """Per-channel symmetric s8 for weights (N, K)."""
+    w = w.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(w), axis=-1)
+    scale = jnp.where(absmax == 0, 1.0, absmax / 127.0)
+    q = jnp.clip(jnp.round(w / scale[:, None]), -127, 127).astype(jnp.int8)
+    return QuantizedWeightI8(q=q, scale=scale)
+
+
+def dequantize_s8(qw: QuantizedWeightI8) -> jax.Array:
+    return qw.q.astype(jnp.float32) * qw.scale[:, None]
+
+
+def u8s8_matmul_decompose(
+    a: QuantizedActivation, w: QuantizedWeightI8, acc_s32: jax.Array
+) -> jax.Array:
+    """Turn a raw u8*s8 s32 accumulation into the f32 result.
+
+    ``acc_s32`` is ``a.q @ w.q.T`` accumulated in int32 (what the MXU /
+    VNNI unit produces); the zero-point correction uses the weight column
+    sums.
+    """
+    colsum = jnp.sum(w.q.astype(jnp.int32), axis=-1)  # (N,)
+    corrected = acc_s32.astype(jnp.float32) - (
+        a.zero.astype(jnp.float32) * colsum[None, :].astype(jnp.float32)
+    )
+    return corrected * a.scale * w.scale[None, :]

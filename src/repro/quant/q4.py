@@ -1,0 +1,91 @@
+"""Q4_0 weight-only quantization (llama.cpp-compatible layout).
+
+The paper evaluates llama2-7B in 4-bit weight-only quantization, "equivalent
+data type in llama.cpp is Q4_0 ... group size of 32, each group has 32 INT4
+data and a FLOAT16 scale".
+
+Faithful format, per group of 32 consecutive K elements:
+  * scale  d = max|x| / -8   (sign chosen so the max maps to -8, llama.cpp's
+    convention — keeps the code-point -8 in use)
+  * codes  q = clamp(round(x/d) + 8, 0, 15), 4 bits each
+  * packing: byte j of the group holds element j in its LOW nibble and
+    element j+16 in its HIGH nibble (llama.cpp block_q4_0).
+
+A weight matrix W of shape (N, K) is stored as
+  packed : uint8 (N, K/2)    — K/32 groups of 16 bytes each
+  scales : float16 (N, K/32)
+
+Bytes per K element: 0.5 (int4) + 2/32 (scale) = 0.5625 — the factor used
+throughout the bandwidth math.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+GROUP = 32
+BYTES_PER_ELEM = 0.5 + 2.0 / GROUP  # 0.5625
+
+
+class QuantizedLinear(NamedTuple):
+    """Q4_0 weights for ``y = x @ W.T`` with W logically (N, K)."""
+
+    packed: jax.Array  # uint8 (N, K // 2)
+    scales: jax.Array  # float16 (N, K // GROUP)
+
+    @property
+    def out_features(self) -> int:
+        return self.packed.shape[0]
+
+    @property
+    def in_features(self) -> int:
+        return self.packed.shape[1] * 2
+
+    @property
+    def nbytes(self) -> int:
+        return self.packed.size + 2 * self.scales.size
+
+
+def quantize_q4_0(w: jax.Array) -> QuantizedLinear:
+    """Quantize W (N, K) to Q4_0.  K must be a multiple of 32."""
+    n, k = w.shape
+    if k % GROUP:
+        raise ValueError(f"K={k} must be a multiple of {GROUP}")
+    g = w.reshape(n, k // GROUP, GROUP).astype(jnp.float32)
+    # llama.cpp: d = max-by-|.| / -8 (keeps the sign of the absmax element).
+    idx = jnp.argmax(jnp.abs(g), axis=-1, keepdims=True)
+    maxval = jnp.take_along_axis(g, idx, axis=-1)  # signed absmax
+    d = maxval / -8.0
+    inv = jnp.where(d == 0, 0.0, 1.0 / d)
+    q = jnp.clip(jnp.round(g * inv) + 8.0, 0.0, 15.0).astype(jnp.uint8)
+    # byte j: elem j low nibble, elem j+16 high nibble
+    lo = q[..., :GROUP // 2]
+    hi = q[..., GROUP // 2:]
+    packed = (lo | (hi << 4)).reshape(n, k // 2)
+    return QuantizedLinear(packed=packed, scales=d[..., 0].astype(jnp.float16))
+
+
+def dequantize_q4_0(qw: QuantizedLinear, dtype=jnp.float32) -> jax.Array:
+    """Exact inverse of the packing (not of the rounding)."""
+    n, half_k = qw.packed.shape
+    k = half_k * 2
+    b = qw.packed.reshape(n, k // GROUP, GROUP // 2)
+    lo = (b & 0x0F).astype(jnp.int8)
+    hi = (b >> 4).astype(jnp.int8)
+    q = jnp.concatenate([lo, hi], axis=-1)  # (n, groups, 32)
+    d = qw.scales.astype(jnp.float32)[..., None]
+    return ((q.astype(jnp.float32) - 8.0) * d).reshape(n, k).astype(dtype)
+
+
+def q4_0_abstract(n: int, k: int) -> QuantizedLinear:
+    """ShapeDtypeStruct stand-in (for dry-runs / eval_shape)."""
+    if k % GROUP:
+        raise ValueError(f"K={k} must be a multiple of {GROUP}")
+    return QuantizedLinear(
+        packed=jax.ShapeDtypeStruct((n, k // 2), jnp.uint8),
+        scales=jax.ShapeDtypeStruct((n, k // GROUP), jnp.float16),
+    )

@@ -1,0 +1,5 @@
+"""Serving substrate: batched engine + proportional replica routing."""
+
+from .engine import ServeEngine, RoutedServer, GenerationResult
+
+__all__ = ["ServeEngine", "RoutedServer", "GenerationResult"]

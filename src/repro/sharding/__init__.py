@@ -1,0 +1,20 @@
+"""Sharding rules (FSDP+TP/EP PartitionSpecs)."""
+
+from .specs import (
+    param_shardings,
+    state_shardings,
+    batch_shardings,
+    opt_shardings,
+    fsdp_axes,
+    data_axes,
+    activation_sharding,
+    constrain,
+    constrain_tree,
+    current_mesh,
+)
+
+__all__ = [
+    "param_shardings", "state_shardings", "batch_shardings",
+    "opt_shardings", "fsdp_axes", "data_axes",
+    "activation_sharding", "constrain", "constrain_tree", "current_mesh",
+]

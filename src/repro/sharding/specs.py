@@ -1,0 +1,328 @@
+"""Sharding rules: FSDP(+pod) x TP/EP PartitionSpecs for every param/state.
+
+Layout summary (mesh axes ``("pod",)? + ("data", "model")``):
+
+* FSDP: the non-TP dim of every matrix is sharded over ``fsdp_axes`` =
+  ("pod","data") on the multi-pod mesh, ("data",) on one pod — weights,
+  moments and grad accumulators all scale 1/(pod*data).
+* TP: attention heads / MLP hidden / vocab shard over "model".
+* EP: MoE expert dim shards over "model" (expert compute is local;
+  GSPMD inserts the dispatch/combine collectives).
+* Mamba/xLSTM: channel dim (d_inner / heads) shards over "model" — these
+  mixers are channel-parallel, the time recurrence stays local.
+* Stacked-period params carry a leading (n_periods) axis -> prepend None.
+
+GSPMD handles non-divisible cases (40 heads over 16, kv=2 over 16) by
+implicit padding, which keeps every (arch x shape) cell compiling; the
+divisible-by-design cells take the fast path.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def fsdp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def data_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# --------------------------------------------------------------- params ---
+def _param_spec(path: str, leaf, fsdp) -> P:
+    """PartitionSpec for one parameter, from its tree path."""
+    f = fsdp
+    rules: list[tuple[str, P]] = [
+        # embeddings
+        (r"embed/tok$", P("model", f)),
+        (r"embed/out$", P(f, "model")),
+        # attention
+        (r"mixer/w[qkv]$", P(f, "model")),
+        (r"mixer/wo$", P("model", f)),
+        (r"mixer/b[qkv]$", P("model")),
+        # dense mlp
+        (r"ffn/w[ig]$", P(f, "model")),
+        (r"ffn/wo$", P("model", f)),
+        # moe
+        (r"ffn/router$", P(f, None)),
+        (r"ffn/w[ig]$", P("model", f, None)),      # (E, d, ff) — EP
+        (r"ffn/swo$", P("model", f)),
+        (r"ffn/sw[ig]$", P(f, "model")),
+        # mamba
+        (r"mixer/in_proj$", P(f, "model")),
+        (r"mixer/conv_w$", P(None, "model")),
+        (r"mixer/conv_b$", P("model")),
+        (r"mixer/x_proj$", P("model", None)),
+        (r"mixer/dt_proj$", P(None, "model")),
+        (r"mixer/dt_bias$", P("model")),
+        (r"mixer/A_log$", P("model", None)),
+        (r"mixer/D$", P("model")),
+        (r"mixer/out_proj$", P("model", f)),
+        # mlstm / slstm: TP over 'model' on the inner dim like the other
+        # mixers.  Known limitation (see EXPERIMENTS §Perf): the per-head
+        # block-diagonal projections and head-interleaved reshapes make
+        # xLSTM resharding-heavy under GSPMD whatever the placement we
+        # tried (model-TP 15.7s / fsdp-only 27.8s / replicated 134s
+        # collective seconds for xlstm-1.3b train_4k); a hand-written
+        # shard_map mixer is the proper fix.
+        (r"mixer/w_(up|z)$", P(f, "model")),
+        (r"mixer/w[qkv]$", P("model", None, None)),  # per-head blockdiag
+        (r"mixer/w_if$", P("model", None)),
+        (r"mixer/b_if$", P(None)),
+        (r"mixer/w_down$", P("model", f)),
+        # slstm
+        (r"mixer/w_x$", P(f, "model")),
+        (r"mixer/r_h$", P("model", None, None)),
+        (r"mixer/bias$", P(None)),
+        (r"mixer/w_out$", P(f, "model")),
+    ]
+    for pat, spec in rules:
+        if re.search(pat, path):
+            if re.search(r"ffn/w[ig]$", path):
+                rank = leaf.ndim - (1 if path.startswith("period") else 0)
+                spec = P("model", f, None) if rank == 3 else P(f, "model")
+            if path.startswith("period"):
+                spec = P(None, *spec)
+            return spec
+    # norms / scalars / anything small: replicate
+    return P(None) if not path.startswith("period") else P(None, None)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(p).strip("[].'") for p in path)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def _fit_spec(mesh: Mesh, spec: P, shape) -> P:
+    """Explicit in_shardings require exact divisibility; drop (replicate)
+    any axis that does not divide its dimension (e.g. kv=8 heads or 4
+    xLSTM heads against model=16)."""
+    out = []
+    for i, axis in enumerate((list(spec) + [None] * len(shape))[: len(shape)]):
+        n = _axis_size(mesh, axis)
+        out.append(axis if n > 1 and shape[i] % n == 0 else
+                   (axis if n == 1 else None))
+    return P(*out)
+
+
+def _serve_spec(path: str, leaf, base: P) -> P:
+    """Inference placement: weights stay stationary (no FSDP gathers —
+    decode is weight-bandwidth bound, the paper's own regime).  MoE expert
+    tensors shard over BOTH axes (E on 'model', ff on 'data'); everything
+    else drops its fsdp axis (replicated across 'data', TP over 'model').
+    """
+    if re.search(r"ffn/w[ig]$", path) and leaf.ndim - (1 if path.startswith("period") else 0) == 3:
+        spec = P("model", None, "data")
+    elif re.search(r"ffn/wo$", path) and leaf.ndim - (1 if path.startswith("period") else 0) == 3:
+        spec = P("model", "data", None)
+    else:
+        # drop fsdp axes from the train spec
+        cleaned = []
+        for ax in base:
+            if ax is None:
+                cleaned.append(None)
+            elif isinstance(ax, (tuple, list)):
+                kept = tuple(a for a in ax if a == "model")
+                cleaned.append(kept[0] if kept else None)
+            else:
+                cleaned.append(ax if ax == "model" else None)
+        return P(*cleaned)
+    if path.startswith("period"):
+        spec = P(None, *spec)
+    return spec
+
+
+def param_shardings(mesh: Mesh, abstract_params, mode: str = "train") -> Any:
+    f = fsdp_axes(mesh)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        spec = _param_spec(ps, leaf, f)
+        if mode == "serve":
+            spec = _serve_spec(ps, leaf, spec)
+        spec = _fit_spec(mesh, spec, leaf.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+# ---------------------------------------------------------------- states --
+def _state_spec(path: str, leaf, dp, batch_sharded: bool,
+                phase: str = "decode") -> P:
+    """Decode/prefill state sharding.  Leading axis is n_periods (stacked).
+
+    KV caches (P, B, Hkv, S, hd):
+      * decode: batch over data + HEAD_DIM over model — hd=64..128 divides
+        every assigned arch, the softmax stays local (psum of tiny (B,H,1,S)
+        partial scores), and the cache write at a traced index lands on an
+        unsharded dim.  Fully shards the cache (e.g. llama4 decode_32k:
+        824 GB global -> 3.2 GB/device).
+      * prefill: heads over model when divisible, else sequence — hd
+        sharding would psum (B,H,S,S) score tensors there.
+    Mamba h: (P, B, di, n) -> di over model.  conv: (P, B, k-1, di).
+    mLSTM c: (P, B, H, dv, dk) -> heads over model; n,m similar.
+    sLSTM c/n/m/h: (P, B, d) -> d over model.
+    """
+    b_ax = dp if batch_sharded else None
+    if re.search(r"(k|v)$", path) and leaf.ndim == 5:
+        if phase == "decode":
+            # sequence over 'model': local partial scores + tiny softmax
+            # psum; the head axis rarely divides (kv=2..24) and hd-sharding
+            # makes GSPMD gather the cache (measured).  Fully shards the
+            # cache: batch x seq.
+            return P(None, b_ax, None, "model", None)
+        if leaf.shape[2] % 16 == 0:
+            return P(None, b_ax, "model", None, None)
+        return P(None, b_ax, None, "model", None)     # KVCache.k/.v
+    if re.search(r"idx$", path):
+        return P(None)
+    if re.search(r"conv$", path):
+        return P(None, b_ax, None, "model")
+    if re.search(r"/h$", path) and leaf.ndim == 4:
+        return P(None, b_ax, "model", None)            # mamba h
+    if leaf.ndim == 5:
+        return P(None, b_ax, "model", None, None)      # mlstm c
+    if leaf.ndim == 4:
+        return P(None, b_ax, "model", None)            # mlstm n
+    if leaf.ndim == 3:
+        return P(None, b_ax, "model")                  # mlstm m / slstm vecs
+    return P(None)
+
+
+def state_shardings(mesh: Mesh, abstract_state, batch: int,
+                    phase: str = "decode") -> Any:
+    dp = data_axes(mesh)
+    import math
+    dp_size = math.prod(mesh.shape[a] for a in dp)
+    batch_sharded = batch % dp_size == 0 and batch >= dp_size
+
+    def one(path, leaf):
+        spec = _state_spec(_path_str(path), leaf, dp, batch_sharded, phase)
+        spec = _fit_spec(mesh, spec, leaf.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, abstract_state)
+
+
+# ---------------------------------------------------------------- batch ---
+def batch_shardings(mesh: Mesh, abstract_batch, batch_dim: int = 0) -> Any:
+    """Token/label/embed inputs: batch over ("pod","data"); for microbatched
+    train inputs (n_micro leading axis) the batch dim is 1."""
+    dp = data_axes(mesh)
+    import math
+    dp_size = math.prod(mesh.shape[a] for a in dp)
+
+    def one(leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if len(shape) > batch_dim and shape[batch_dim] % dp_size == 0 and \
+                shape[batch_dim] >= dp_size:
+            spec[batch_dim] = dp
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, abstract_batch)
+
+
+def opt_shardings(mesh: Mesh, abstract_opt, params_shardings) -> Any:
+    """Optimizer state follows param sharding; factored row/col stats drop
+    the last/second-last dim's axis respectively; step is replicated."""
+    def spec_of(s: NamedSharding) -> P:
+        return s.spec
+
+    import repro.training.optimizer as O  # noqa
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        m = re.match(r"(mu|nu)/(.*?)(/row|/col)?$", ps)
+        if not m:
+            return NamedSharding(mesh, P())  # step
+        base_path = m.group(2)
+        tail = m.group(3)
+        # find the matching param sharding by path
+        flat = jax.tree_util.tree_flatten_with_path(params_shardings)[0]
+        target = None
+        for p_path, shard in flat:
+            if _path_str(p_path) == base_path:
+                target = shard
+                break
+        if target is None:
+            return NamedSharding(mesh, P(*( [None] * leaf.ndim )))
+        spec = list(spec_of(target))
+        spec = (spec + [None] * leaf.ndim)[: max(leaf.ndim, len(spec))]
+        if tail == "/row":
+            spec = spec[:-1]
+        elif tail == "/col":
+            spec = spec[:-2] + spec[-1:]
+        spec = (spec + [None] * leaf.ndim)[: leaf.ndim]
+        return NamedSharding(mesh, _fit_spec(mesh, P(*spec), leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, abstract_opt)
+
+
+# ------------------------------------------------ activation constraints --
+# GSPMD sharding propagation is weak through while loops (scan-over-periods
+# + remat): without explicit constraints the carry/activations fall back to
+# replicated-batch layouts, turning every TP psum into a full-activation
+# all-reduce (measured: 2.6 TB wire per train step for granite-8b).  Model
+# code calls ``constrain(x, ("dp", None, "tp"))``; a driver installs the
+# mesh via ``activation_sharding(mesh)`` — with no context installed the
+# helpers are no-ops, so single-device tests/examples are untouched.
+
+import contextlib as _contextlib
+import contextvars as _contextvars
+
+_ACT_MESH: "_contextvars.ContextVar" = _contextvars.ContextVar(
+    "activation_mesh", default=None)
+
+
+@_contextlib.contextmanager
+def activation_sharding(mesh: Mesh):
+    token = _ACT_MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _ACT_MESH.reset(token)
+
+
+def constrain(x, dims) -> Any:
+    """dims: per-axis entries of {"dp", "tp", None} (trailing Nones may be
+    omitted).  No-op outside an activation_sharding context."""
+    mesh = _ACT_MESH.get()
+    if mesh is None or x is None:
+        return x
+    dp = data_axes(mesh)
+    spec = []
+    for d in dims:
+        spec.append(dp if d == "dp" else ("model" if d == "tp" else None))
+    spec = _fit_spec(mesh, P(*spec), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_tree(tree, shardings) -> Any:
+    """Constrain a pytree (e.g. grad accumulators) to given NamedShardings;
+    no-op when no mesh context is installed."""
+    if _ACT_MESH.get() is None or shardings is None:
+        return tree
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(x, s), tree, shardings)
+
+
+def current_mesh():
+    """The mesh installed by :func:`activation_sharding` (or None)."""
+    return _ACT_MESH.get()

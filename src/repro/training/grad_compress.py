@@ -1,0 +1,58 @@
+"""INT8 gradient compression with error feedback (distributed-optimization
+trick for cross-pod all-reduce).
+
+Cross-pod links (DCN between pods) are ~10x slower than in-pod ICI; gradient
+bytes dominate the pod-boundary collective term.  Per-tensor symmetric int8
+quantization cuts those bytes 4x (vs f32 grads) / 2x (vs bf16); the residual
+(quantization error) is carried to the next step (error feedback), which
+keeps SGD/Adam convergence — standard 1-bit/8-bit Adam practice.
+
+``compress -> (all-reduce int8-as-int32 sums...) -> decompress`` —— in this
+framework we quantize before the *pod-axis* psum only (in-pod reduction
+stays full precision), see ``training/train_step.py``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Compressed(NamedTuple):
+    q: jax.Array      # int8 payload
+    scale: jax.Array  # () f32 per tensor
+
+
+def compress(g: jax.Array, err: jax.Array) -> tuple[Compressed, jax.Array]:
+    """Quantize g + carried error; returns (payload, new_error)."""
+    x = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return Compressed(q=q, scale=scale), x - deq
+
+
+def decompress(c: Compressed) -> jax.Array:
+    return c.q.astype(jnp.float32) * c.scale
+
+
+def compress_tree(grads, errors):
+    """Tree-mapped compress; errors pytree matches grads."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(errors)
+    out = [compress(g, e) for g, e in zip(flat_g, flat_e)]
+    comp = treedef.unflatten([o[0] for o in out])
+    new_err = treedef.unflatten([o[1] for o in out])
+    return comp, new_err
+
+
+def decompress_tree(comp):
+    return jax.tree.map(
+        decompress, comp, is_leaf=lambda x: isinstance(x, Compressed)
+    )
+
+
+def init_errors(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

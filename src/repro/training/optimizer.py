@@ -1,0 +1,121 @@
+"""AdamW + schedules, built from scratch (no optax dependency).
+
+Master weights and moments are float32 regardless of param dtype (bf16
+params are cast on apply) — standard mixed-precision discipline.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    # Memory regime for >=100B models on 16GB/chip: factored second moment
+    # (Adafactor-style row/col stats for ndim>=2 tensors) + bf16 first
+    # moment.  Full f32 AdamW moments for llama4/jamba at 256 chips need
+    # ~12.5 GB/device — they do not fit next to params + activations.
+    factored: bool = False
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = cfg.lr * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 *
+                    (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def _factorable(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+
+def init_opt_state(params, cfg: Optional[AdamWConfig] = None) -> OptState:
+    factored = bool(cfg and cfg.factored)
+
+    def mu_init(p):
+        return jnp.zeros(p.shape, jnp.bfloat16 if factored else jnp.float32)
+
+    def nu_init(p):
+        if factored and _factorable(p):
+            # row/col second-moment statistics (Adafactor)
+            return {
+                "row": jnp.zeros(p.shape[:-1], jnp.float32),
+                "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return jnp.zeros(p.shape, jnp.float32)
+
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    mu=jax.tree.map(mu_init, params),
+                    nu=jax.tree.map(nu_init, params))
+
+
+def global_norm(grads) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+
+
+def adamw_update(
+    cfg: AdamWConfig, params, grads, state: OptState
+) -> tuple[dict, OptState, dict]:
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu2 = (cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g).astype(mu.dtype)
+        if isinstance(nu, dict):  # factored second moment
+            g2 = g * g + 1e-30
+            row = cfg.b2 * nu["row"] + (1 - cfg.b2) * g2.mean(-1)
+            col = cfg.b2 * nu["col"] + (1 - cfg.b2) * g2.mean(-2)
+            nu2 = {"row": row, "col": col}
+            vhat = (row[..., None] * col[..., None, :]
+                    / jnp.maximum(row.mean(-1)[..., None, None], 1e-30)) / b2c
+        else:
+            nu2 = cfg.b2 * nu + (1 - cfg.b2) * g * g
+            vhat = nu2 / b2c
+        mhat = mu2.astype(jnp.float32) / b1c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (norms/biases exempt)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu2, nu2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state.mu)
+    flat_nu = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, OptState(step=step, mu=new_mu, nu=new_nu), metrics

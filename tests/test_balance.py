@@ -1,0 +1,93 @@
+"""Tests for the TPU-scale adaptation planners (repro.core.balance)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (
+    DeviceRuntime,
+    ExpertCapacityPlanner,
+    ReplicaRouter,
+    UnevenBatchPlanner,
+)
+
+
+def test_uneven_batch_planner_converges():
+    """Pods with 2x throughput end up with ~2x the microbatches."""
+    rt = DeviceRuntime(n_slices=4, alpha=0.3)
+    planner = UnevenBatchPlanner(rt)
+    tp = np.array([2.0, 2.0, 1.0, 1.0])  # true microbatches/sec
+    plan = planner.plan(24)
+    assert plan.total == 24
+    np.testing.assert_array_equal(plan.counts, [6, 6, 6, 6])  # cold start: even
+    for _ in range(30):
+        times = plan.counts / tp
+        planner.report(plan, times)
+        plan = planner.plan(24)
+    np.testing.assert_array_equal(plan.counts, [8, 8, 4, 4])
+    # weights are consistent for the weighted all-reduce
+    np.testing.assert_allclose(plan.weights.sum(), 1.0)
+
+
+def test_uneven_batch_min_per_slice():
+    rt = DeviceRuntime(n_slices=4)
+    planner = UnevenBatchPlanner(rt, min_per_slice=1)
+    # Extremely skewed table must still give every pod >= 1.
+    rt._tables["train_step"] = np.array([100.0, 1e-6, 1e-6, 1e-6])
+    plan = planner.plan(8)
+    assert plan.total == 8
+    assert np.all(plan.counts >= 1)
+
+
+def test_uneven_batch_too_few_microbatches():
+    rt = DeviceRuntime(n_slices=8)
+    with pytest.raises(ValueError):
+        UnevenBatchPlanner(rt).plan(4)
+
+
+@given(st.integers(min_value=2, max_value=64), st.integers(min_value=0, max_value=10))
+def test_expert_capacity_invariants(n_experts, seed):
+    rng = np.random.default_rng(seed)
+    total = 64 * n_experts
+    p = ExpertCapacityPlanner(n_experts, total, min_capacity=8, granularity=8)
+    for _ in range(5):
+        p.observe(rng.integers(0, 100, size=n_experts))
+        caps = p.capacities()
+        assert caps.sum() == total          # fixed compute budget
+        assert np.all(caps >= 8)            # floor
+        assert p.load_ema.shape == (n_experts,)
+
+
+def test_expert_capacity_tracks_hot_expert():
+    p = ExpertCapacityPlanner(4, total_capacity=400, min_capacity=8,
+                              granularity=8, alpha=0.3)
+    for _ in range(20):
+        p.observe(np.array([700, 100, 100, 100]))
+    caps = p.capacities()
+    assert caps[0] > 2.5 * caps[1]
+    assert caps.sum() == 400
+
+
+def test_replica_router():
+    rt = DeviceRuntime(n_slices=2, alpha=0.0)  # no smoothing: immediate
+    router = ReplicaRouter(rt)
+    counts = router.split(12)
+    np.testing.assert_array_equal(counts, [6, 6])
+    router.report(np.array([6, 6]), np.array([1.0, 3.0]))  # replica 1 is 3x slower
+    counts = router.split(12)
+    assert counts[0] == 9 and counts[1] == 3
+
+
+def test_device_runtime_units_update():
+    """Update with explicit units does not assume proportional assignment."""
+    rt = DeviceRuntime(n_slices=2, alpha=0.0)
+    rt.update("p", times=np.array([1.0, 1.0]), units=np.array([3.0, 1.0]))
+    pr = rt.ratios("p")
+    np.testing.assert_allclose(pr / pr.sum(), [0.75, 0.25])
+
+
+def test_device_runtime_history():
+    rt = DeviceRuntime(n_slices=2)
+    rt.update("p", np.array([1.0, 2.0]))
+    rt.update("p", np.array([1.0, 2.0]))
+    assert len(rt.history["p"]) == 3  # init + 2 updates

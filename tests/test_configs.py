@@ -1,0 +1,59 @@
+"""Assignment-grid invariants: 40 cells, skip rules, input specs."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, SHAPES, cells, get_config, shape_supported
+
+
+def test_grid_is_40_cells_with_8_skips():
+    all_cells = list(cells(include_skipped=True))
+    assert len(all_cells) == 40
+    supported = [c for c in all_cells if c[2]]
+    skipped = [c for c in all_cells if not c[2]]
+    assert len(supported) == 32
+    assert len(skipped) == 8
+    assert all(s == "long_500k" for _, s, _ in skipped)
+    skipped_archs = {a for a, _, _ in skipped}
+    assert "jamba-1.5-large-398b" not in skipped_archs
+    assert "xlstm-1.3b" not in skipped_archs
+
+
+def test_long500k_only_subquadratic():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        assert shape_supported(cfg, "long_500k") == cfg.sub_quadratic
+
+
+def test_shape_table_matches_assignment():
+    s = SHAPES
+    assert (s["train_4k"].seq, s["train_4k"].batch) == (4096, 256)
+    assert (s["prefill_32k"].seq, s["prefill_32k"].batch) == (32768, 32)
+    assert (s["decode_32k"].seq, s["decode_32k"].batch) == (32768, 128)
+    assert (s["long_500k"].seq, s["long_500k"].batch) == (524288, 1)
+    assert s["decode_32k"].kind == "decode"
+    assert s["long_500k"].kind == "decode"  # lowers serve_step, not train
+
+
+def test_input_specs_shapes():
+    # import inside: dryrun sets XLA_FLAGS at module import — only safe in
+    # a test because jax is already initialized with 1 device here.
+    from repro.launch.dryrun import input_specs
+
+    cfg = get_config("granite-8b")
+    tr = input_specs(cfg, SHAPES["train_4k"], n_micro=8)
+    assert tr["batch"]["tokens"].shape == (8, 32, 4096)
+    pf = input_specs(cfg, SHAPES["prefill_32k"])
+    assert pf["tokens"].shape == (32, 32768)
+    dc = input_specs(cfg, SHAPES["decode_32k"])
+    assert dc["tokens"].shape == (128, 1)
+
+    vlm = get_config("internvl2-26b")
+    tv = input_specs(vlm, SHAPES["train_4k"])
+    assert tv["batch"]["tokens"].shape == (8, 32, 4096 - 256)
+    assert tv["batch"]["prefix_embeds"].shape == (8, 32, 256, 6144)
+
+    audio = get_config("musicgen-medium")
+    ta = input_specs(audio, SHAPES["train_4k"])
+    assert ta["batch"]["embeds"].shape == (8, 32, 4096, 1536)
+    assert ta["batch"]["embeds"].dtype == jnp.bfloat16

@@ -1,0 +1,78 @@
+"""Pipeline-stage planner tests (Eq. 3 applied to stage assignment)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.pipeline import (
+    PipelinePlan,
+    choose_microbatches,
+    layer_costs_from_config,
+    plan_stages,
+)
+
+
+def test_uniform_layers_uniform_pods():
+    plan = plan_stages([1.0] * 16, 4)
+    assert plan.boundaries == (0, 4, 8, 12, 16)
+    assert plan.makespan_per_microbatch == pytest.approx(4.0)
+
+
+def test_heterogeneous_pods_get_proportional_layers():
+    """A 2x-faster pod should own ~2x the layers (Eq. 3 on stages)."""
+    plan = plan_stages([1.0] * 12, 2, stage_ratios=[2.0, 1.0])
+    n0 = plan.boundaries[1] - plan.boundaries[0]
+    n1 = plan.boundaries[2] - plan.boundaries[1]
+    assert n0 == 8 and n1 == 4
+    # balanced stage *times*
+    t = plan.stage_times
+    assert abs(t[0] - t[1]) / max(t) < 1e-9
+
+
+def test_unequal_layer_costs():
+    # one huge layer: the split must isolate it
+    costs = [1, 1, 1, 10, 1, 1]
+    plan = plan_stages(costs, 2)
+    assert plan.makespan_per_microbatch < sum(costs) - 1  # better than naive
+    # DP is exact: enumerate all contiguous splits
+    best = min(max(sum(costs[:i]), sum(costs[i:])) for i in range(1, 6))
+    assert plan.makespan_per_microbatch == pytest.approx(best)
+
+
+@given(
+    st.lists(st.floats(min_value=0.1, max_value=10), min_size=4, max_size=24),
+    st.integers(min_value=1, max_value=4),
+)
+@settings(max_examples=30, deadline=None)
+def test_dp_beats_or_matches_even_split(costs, n_stages):
+    n_stages = min(n_stages, len(costs))
+    plan = plan_stages(costs, n_stages)
+    # compare against the naive equal-count split
+    n = len(costs)
+    step = n // n_stages
+    bounds = [min(i * step, n) for i in range(n_stages)] + [n]
+    naive = max(sum(costs[bounds[s]: bounds[s + 1]]) for s in range(n_stages))
+    assert plan.makespan_per_microbatch <= naive + 1e-9
+    # partition invariants
+    assert plan.boundaries[0] == 0 and plan.boundaries[-1] == n
+    assert all(b2 > b1 for b1, b2 in zip(plan.boundaries, plan.boundaries[1:]))
+
+
+def test_jamba_stage_plan_isolates_moe_attention_load():
+    """Jamba's per-layer costs differ (mamba vs attn vs MoE); the planner
+    must beat the equal-count split."""
+    cfg = get_config("jamba-1.5-large-398b")
+    costs = layer_costs_from_config(cfg)
+    assert len(costs) == 72
+    plan = plan_stages(costs, 8)
+    even = max(sum(costs[i * 9:(i + 1) * 9]) for i in range(8))
+    assert plan.makespan_per_microbatch <= even
+    assert plan.bubble_fraction(32) == pytest.approx(7 / 39)
+
+
+def test_choose_microbatches():
+    plan = plan_stages([1.0] * 8, 4)
+    m = choose_microbatches(plan, max_bubble=0.1)
+    assert plan.bubble_fraction(m) <= 0.1 + 1e-9
+    assert choose_microbatches(plan_stages([1.0], 1)) == 1

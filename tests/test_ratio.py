@@ -1,0 +1,131 @@
+"""Property tests (hypothesis) for the paper's Eq. 1-3 + EMA filter."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ratio as R
+
+ratios_strategy = st.lists(
+    st.floats(min_value=0.05, max_value=100.0, allow_nan=False),
+    min_size=1, max_size=32,
+).map(np.array)
+
+
+@given(ratios_strategy)
+def test_optimal_shares_normalized(pr):
+    shares = R.optimal_shares(pr)
+    assert shares.shape == pr.shape
+    assert abs(shares.sum() - 1.0) < 1e-9
+    assert np.all(shares >= 0)
+
+
+@given(ratios_strategy, st.integers(min_value=0, max_value=100_000),
+       st.integers(min_value=1, max_value=64))
+def test_partition_sums_and_granularity(pr, s, g):
+    counts = R.proportional_partition(s, pr, g)
+    assert counts.sum() == s
+    assert np.all(counts >= 0)
+    # All but the fastest worker receive exact tile multiples.
+    fastest = int(np.argmax(pr))
+    for i, c in enumerate(counts):
+        if i != fastest:
+            assert c % g == 0
+
+
+@given(ratios_strategy, st.integers(min_value=1, max_value=1_000_000))
+def test_partition_proportionality(pr, s):
+    """Integer counts are within one granule of the ideal share."""
+    counts = R.proportional_partition(s, pr, 1)
+    ideal = R.optimal_shares(pr) * s
+    assert np.all(np.abs(counts - ideal) <= len(pr))
+
+
+@given(ratios_strategy)
+def test_observed_ratios_fixpoint(pr):
+    """Equal times => ratios proportional to previous table (scale-invariant
+    fixpoint of Eq. 2)."""
+    times = np.ones_like(pr)
+    new = R.observed_ratios(pr, times, normalize="mean")
+    np.testing.assert_allclose(
+        new / new.sum(), pr / pr.sum(), rtol=1e-9, atol=1e-12
+    )
+    assert abs(new.sum() - len(pr)) < 1e-6  # mean-normalized
+
+
+@given(ratios_strategy)
+def test_observed_ratios_sum_normalization(pr):
+    new = R.observed_ratios(pr, np.ones_like(pr), normalize="sum")
+    assert abs(new.sum() - 1.0) < 1e-9
+
+
+def test_observed_ratios_recovers_truth():
+    """If work was assigned ∝ pr and true speeds are tp, one exact update
+    recovers tp (up to scale): t_i = pr_i/tp_i => pr'_i ∝ tp_i."""
+    pr = np.array([1.0, 1.0, 1.0, 1.0])
+    tp = np.array([4.0, 2.0, 1.0, 1.0])  # true throughputs
+    times = (pr / pr.sum()) / tp  # time for proportional share
+    new = R.observed_ratios(pr, times)
+    np.testing.assert_allclose(new / new.sum(), tp / tp.sum(), rtol=1e-9)
+
+
+def test_idle_worker_keeps_ratio():
+    pr = np.array([3.0, 1.0, 2.0])
+    times = np.array([0.5, 0.0, 0.4])  # worker 1 got no work
+    new = R.observed_ratios(pr, times)
+    # worker 1 carried over unchanged
+    assert new[1] == pr[1]
+
+
+@given(ratios_strategy, st.floats(min_value=0.0, max_value=1.0))
+def test_ema_bounds(pr, alpha):
+    new = pr * 2.0
+    out = R.ema_update(pr, new, alpha)
+    assert np.all(out >= np.minimum(pr, new) - 1e-12)
+    assert np.all(out <= np.maximum(pr, new) + 1e-12)
+
+
+def test_ema_paper_alpha():
+    out = R.ema_update(np.array([5.0]), np.array([3.0]), alpha=0.3)
+    np.testing.assert_allclose(out, [0.3 * 5 + 0.7 * 3])
+
+
+@given(st.integers(min_value=2, max_value=16), st.integers(min_value=1, max_value=40))
+def test_update_converges_to_truth(n, seed):
+    """Iterating (partition ∝ pr) -> (observe true times) -> Eq.2+EMA drives
+    pr to the true relative throughput — the paper's Fig. 4 behaviour."""
+    rng = np.random.default_rng(seed)
+    tp = rng.uniform(0.5, 8.0, size=n)
+    pr = np.full(n, 5.0)  # paper's "initially set at 5"
+    for _ in range(60):
+        shares = R.optimal_shares(pr)
+        times = shares / tp
+        pr = R.ema_update(pr, R.observed_ratios(pr, times), alpha=0.3)
+    np.testing.assert_allclose(pr / pr.sum(), tp / tp.sum(), rtol=5e-3)
+
+
+def test_makespan_optimality_of_eq3():
+    """Eq. 1: proportional shares minimize makespan vs any random split."""
+    rng = np.random.default_rng(0)
+    tp = np.array([4.0, 4.0, 1.0, 1.0])
+    s = 10_000
+    opt = R.proportional_partition(s, tp)
+    t_opt = R.makespan(opt, tp)
+    for _ in range(200):
+        w = rng.dirichlet(np.ones(4))
+        counts = np.round(w * s).astype(int)
+        counts[-1] += s - counts.sum()
+        if np.any(counts < 0):
+            continue
+        assert R.makespan(counts, tp) >= t_opt - 1e-9
+
+
+def test_partition_degenerate_zero_ratios():
+    counts = R.proportional_partition(100, np.zeros(4))
+    assert counts.sum() == 100
+
+
+def test_partition_more_workers_than_tiles():
+    counts = R.proportional_partition(2, np.ones(8), granularity=1)
+    assert counts.sum() == 2
+    assert (counts > 0).sum() == 2

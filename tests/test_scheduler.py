@@ -1,0 +1,163 @@
+"""System tests for the dynamic scheduler on simulated hybrid CPUs.
+
+These verify the paper's *claims*: dynamic proportional dispatch converges to
+near-optimal makespan on hybrid machines, substantially beating the static
+(OpenMP-balanced) baseline, while being neutral on homogeneous machines.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CPURuntime,
+    DynamicScheduler,
+    StaticScheduler,
+    KernelSpec,
+    SubTask,
+    ThreadWorkerPool,
+    VirtualWorkerPool,
+    make_machine,
+)
+
+# Fig. 2 GEMM (1024x4096x4096): Neural Speed splits the N dim; one unit of
+# the parallel dim = one output column = 2*M*K MACs.
+GEMM = KernelSpec(name="int8_gemm", isa="avx_vnni", granularity=16,
+                  work_per_unit=2 * 1024 * 4096)
+# Fig. 2 GEMV (1x4096x4096): memory bound; one output element reads one
+# Q4_0 weight row of K=4096 -> 4096 * 0.5625 bytes (int4 + fp16 scale /32).
+GEMV = KernelSpec(name="q4_gemv", isa="membw", granularity=8,
+                  work_per_unit=4096 * 0.5625)
+
+
+def run_steady_state(machine_name, kernel, s, iters=40, tail=10, seed=0):
+    """Returns (mean dynamic makespan over the steady-state tail, mean static
+    makespan, noise-free optimal makespan)."""
+    machine = make_machine(machine_name, seed=seed)
+    pool = VirtualWorkerPool(machine, isa=kernel.isa)
+    runtime = CPURuntime(machine.n_cores, alpha=0.3)
+    sched = DynamicScheduler(runtime, pool)
+    for _ in range(iters):
+        sched.dispatch(kernel, s)
+    dyn = float(np.mean([st.makespan for st in sched.stats[-tail:]]))
+    static_pool = VirtualWorkerPool(make_machine(machine_name, seed=seed),
+                                    isa=kernel.isa)
+    static = StaticScheduler(static_pool)
+    for _ in range(tail):
+        static.dispatch(kernel, s)
+    st = float(np.mean([x.makespan for x in static.stats]))
+    opt = machine.optimal_makespan(kernel.isa, s * kernel.work_per_unit)
+    return dyn, st, opt
+
+
+@pytest.mark.parametrize("machine", ["ultra-125h", "core-12900k"])
+def test_dynamic_beats_static_gemm(machine):
+    dyn, st, opt = run_steady_state(machine, GEMM, s=4096)
+    speedup = st / dyn
+    # Paper: 65% (125H) and 85% (12900K) GEMM improvement.
+    assert speedup > 1.5, f"{machine}: speedup {speedup:.2f}"
+    # ...and we approach the machine's optimal makespan within 10%.
+    assert dyn < opt * 1.10
+
+
+@pytest.mark.parametrize("machine", ["ultra-125h", "core-12900k"])
+def test_dynamic_gemv_bandwidth(machine):
+    dyn, st, opt = run_steady_state(machine, GEMV, s=4096)
+    # bandwidth utilization = optimal_time / achieved_time
+    util = opt / dyn
+    assert util > 0.90, f"{machine}: bandwidth util {util:.2%}"  # paper: >90%
+
+
+def test_homogeneous_no_regression():
+    dyn, st, opt = run_steady_state("homogeneous-8", GEMM, s=4096)
+    # On a non-hybrid machine dynamic must not be materially worse.
+    assert dyn <= st * 1.05
+
+
+def test_ratio_trace_converges_and_adapts():
+    """Fig. 4: init ratio 5 converges to ~3-3.5 for a P-core on 125H, and
+    the table *re-adapts* when the bottleneck changes (prefill->decode)."""
+    machine = make_machine("ultra-125h")
+    runtime = CPURuntime(machine.n_cores, alpha=0.3, init_ratio=5.0)
+    pool = VirtualWorkerPool(machine, isa="avx_vnni")
+    sched = DynamicScheduler(runtime, pool)
+    for _ in range(40):
+        sched.dispatch(GEMM, 4096)
+    p0 = runtime.ratios("avx_vnni")[0]
+    tp = machine.true_throughput("avx_vnni")
+    expected = tp[0] / tp.mean()
+    # Converged to the machine's true relative throughput (paper Fig. 4
+    # plots 3-3.5 under its own undisclosed normalization; the invariant we
+    # can check exactly is convergence-to-truth + the init-5 drop).
+    assert abs(p0 - expected) / expected < 0.10
+    assert p0 < 5.0  # dropped from the deliberately-too-high init
+
+    # Decode phase: memory-bound kernel has its own (smaller) ratios.
+    pool2 = VirtualWorkerPool(machine, isa="membw")
+    sched2 = DynamicScheduler(runtime, pool2)
+    for _ in range(40):
+        sched2.dispatch(GEMV, 4096)
+    p0_mem = runtime.ratios("membw")[0]
+    assert p0_mem < p0  # decode ratios compress toward 1 (Fig. 4)
+
+
+def test_adapts_to_background_load():
+    """A sudden background program throttling core 0 must be absorbed."""
+    machine = make_machine("ultra-125h")
+    machine.background.append((0.0, 1e9, 0, 3.0))  # core 0 3x slower, forever
+    pool = VirtualWorkerPool(machine, isa="avx_vnni")
+    runtime = CPURuntime(machine.n_cores, alpha=0.3)
+    sched = DynamicScheduler(runtime, pool)
+    for _ in range(40):
+        last = sched.dispatch(GEMM, 4096)
+    tp = machine.true_throughput("avx_vnni").copy()
+    tp[0] /= 3.0
+    opt = (4096 * GEMM.work_per_unit) / tp.sum()
+    assert last.makespan < opt * 1.10
+
+
+def test_thread_pool_executes_correctly():
+    """Real-thread mode: the partitioned execution computes the right thing."""
+    out = np.zeros(1000)
+    x = np.arange(1000, dtype=np.float64)
+
+    def fn(start, size):
+        out[start:start + size] = x[start:start + size] * 2
+
+    pool = ThreadWorkerPool(4)
+    try:
+        runtime = CPURuntime(4)
+        sched = DynamicScheduler(runtime, pool)
+        kernel = KernelSpec(name="scale", isa="avx2", granularity=8)
+        stats = sched.dispatch(kernel, 1000, fn=fn)
+        np.testing.assert_allclose(out, x * 2)
+        assert stats.counts.sum() == 1000
+    finally:
+        pool.close()
+
+
+def test_virtual_pool_execute_mode():
+    """Virtual pool can also run the real fn (used by e2e benchmarks)."""
+    acc = np.zeros(64)
+
+    def fn(start, size):
+        acc[start:start + size] += 1
+
+    machine = make_machine("ultra-125h")
+    pool = VirtualWorkerPool(machine, isa="avx2", execute=True)
+    runtime = CPURuntime(machine.n_cores)
+    sched = DynamicScheduler(runtime, pool)
+    sched.dispatch(KernelSpec("inc", "avx2"), 64, fn=fn)
+    np.testing.assert_allclose(acc, 1.0)
+
+
+def test_imbalance_metric():
+    machine = make_machine("core-12900k")
+    pool = VirtualWorkerPool(machine, isa="avx_vnni")
+    runtime = CPURuntime(machine.n_cores)
+    sched = DynamicScheduler(runtime, pool)
+    first = sched.dispatch(GEMM, 4096)
+    for _ in range(30):
+        last = sched.dispatch(GEMM, 4096)
+    # Static-equal first dispatch is imbalanced; steady state is balanced.
+    assert first.imbalance > 1.5
+    assert last.imbalance < 1.1

@@ -1,0 +1,36 @@
+"""Tests for the kernel-config tuner (per-ISA table analogue)."""
+
+from repro.core import KernelTuner, shape_class
+
+
+def test_shape_class_buckets():
+    assert shape_class(1000, 4096) == (1024, 4096)
+    assert shape_class(1, 1) == (1, 1)
+
+
+def test_tuner_warmup_then_argmin():
+    t = KernelTuner(alpha=0.3, min_trials=2)
+    key = ("q4_matmul", shape_class(1024, 4096, 4096))
+    configs = ["a", "b", "c"]
+    # Warmup: every config must be tried min_trials times.
+    seen = []
+    for _ in range(6):
+        c = t.select(key, configs)
+        seen.append(c)
+        t.report(key, c, {"a": 3.0, "b": 1.0, "c": 2.0}[c])
+    assert sorted(seen) == ["a", "a", "b", "b", "c", "c"]
+    assert t.select(key, configs) == "b"
+    assert t.best(key) == "b"
+
+
+def test_tuner_readapts_on_drift():
+    t = KernelTuner(alpha=0.3, min_trials=1)
+    key = "k"
+    for c, s in [("a", 1.0), ("b", 2.0)]:
+        t.select(key, ["a", "b"])
+        t.report(key, c, s)
+    assert t.select(key, ["a", "b"]) == "a"
+    # Environment drifts: config a becomes slow.
+    for _ in range(10):
+        t.report(key, "a", 5.0)
+    assert t.select(key, ["a", "b"]) == "b"
