@@ -21,13 +21,12 @@ from __future__ import annotations
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import (
+from repro.core import VirtualWorkerPool, make_machine
+from repro.runtime import (
     CPURuntime,
     DynamicScheduler,
     KernelSpec,
     StaticScheduler,
-    VirtualWorkerPool,
-    make_machine,
 )
 
 from .common import Q4_BYTES_PER_ELEM, fmt

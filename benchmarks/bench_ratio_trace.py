@@ -13,12 +13,8 @@ import os
 
 import numpy as np
 
-from repro.core import (
-    CPURuntime,
-    DynamicScheduler,
-    VirtualWorkerPool,
-    make_machine,
-)
+from repro.core import VirtualWorkerPool, make_machine
+from repro.runtime import CPURuntime, DynamicScheduler
 
 from .common import GEMM_KERNEL, GEMV_KERNEL, fmt
 
@@ -60,8 +56,7 @@ def run() -> list[tuple]:
     machine2.background.append((0.0, 1e9, 0, 3.0))
     runtime2 = CPURuntime(machine2.n_cores, alpha=0.3)
     # warm-start with the *unthrottled* converged table (worst case)
-    runtime2.ratios("avx_vnni")  # initialize table + history
-    runtime2._tables["avx_vnni"] = runtime.ratios("avx_vnni").copy()
+    runtime2.set("avx_vnni", runtime.ratios("avx_vnni"))
     sched3 = DynamicScheduler(runtime2, VirtualWorkerPool(machine2,
                                                           isa="avx_vnni"))
     tp2 = machine2.true_throughput("avx_vnni").copy()

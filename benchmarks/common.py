@@ -9,13 +9,12 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (
+from repro.core import VirtualWorkerPool, make_machine
+from repro.runtime import (
     CPURuntime,
     DynamicScheduler,
     KernelSpec,
     StaticScheduler,
-    VirtualWorkerPool,
-    make_machine,
 )
 
 # Paper Fig. 2 kernel problems.

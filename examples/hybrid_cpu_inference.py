@@ -11,9 +11,8 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks.bench_e2e import simulate
-from repro.core import (
-    CPURuntime, DynamicScheduler, KernelSpec, VirtualWorkerPool, make_machine,
-)
+from repro.core import VirtualWorkerPool, make_machine
+from repro.runtime import CPURuntime, DynamicScheduler, KernelSpec
 
 GEMM = KernelSpec("int8_gemm", "avx_vnni", granularity=16,
                   work_per_unit=2 * 1024 * 4096)

@@ -8,9 +8,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
+from repro.core import VirtualWorkerPool, make_machine
+from repro.runtime import (
     CPURuntime, DynamicScheduler, StaticScheduler, KernelSpec,
-    VirtualWorkerPool, make_machine,
 )
 from repro.configs import reduced_config
 from repro.data import DataConfig, SyntheticLM

@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.checkpoint import latest_step, restore, save
 from repro.configs.base import ModelConfig
-from repro.core.balance import DeviceRuntime, UnevenBatchPlanner
+from repro.runtime import DeviceRuntime, UnevenBatchPlanner
 from repro.data import DataConfig, Prefetcher, SyntheticLM
 from repro.models import init_params
 from repro.training import (

@@ -1,7 +1,11 @@
-"""Core of the reproduction: the paper's dynamic parallel method.
+"""Core of the reproduction: ratio math, worker pools, machine models.
 
-Faithful layer (paper §2): :mod:`ratio`, :mod:`pool`, :mod:`scheduler`,
-:mod:`hybrid_sim`.  TPU-scale adaptation: :mod:`balance`, :mod:`tuner`.
+Faithful layer (paper §2): :mod:`ratio`, :mod:`pool`, :mod:`hybrid_sim`.
+The balancing loops themselves (ratio tables, schedulers, planners) live in
+:mod:`repro.runtime`; :mod:`scheduler` and :mod:`balance` are deprecation
+shims re-exporting from there, and this package lazily re-exports the same
+names so seed-era ``from repro.core import ...`` imports keep working for
+one release.
 """
 
 from .ratio import (
@@ -13,14 +17,7 @@ from .ratio import (
     makespan,
 )
 from .pool import SubTask, ThreadWorkerPool, VirtualWorkerPool
-from .scheduler import KernelSpec, CPURuntime, DynamicScheduler, StaticScheduler
 from .hybrid_sim import CoreSpec, SimulatedHybridCPU, make_machine, MACHINES
-from .balance import (
-    DeviceRuntime,
-    UnevenBatchPlanner,
-    ExpertCapacityPlanner,
-    ReplicaRouter,
-)
 from .tuner import KernelTuner, shape_class
 from .pipeline import (
     PipelinePlan,
@@ -28,6 +25,30 @@ from .pipeline import (
     choose_microbatches,
     layer_costs_from_config,
 )
+
+# Names that moved to repro.runtime, resolved lazily (PEP 562) so importing
+# repro.core does not circularly import repro.runtime (whose modules build
+# on repro.core.ratio / repro.core.pool).
+_MOVED_TO_RUNTIME = (
+    "KernelSpec",
+    "CPURuntime",
+    "DynamicScheduler",
+    "StaticScheduler",
+    "DeviceRuntime",
+    "MicrobatchPlan",
+    "UnevenBatchPlanner",
+    "ExpertCapacityPlanner",
+    "ReplicaRouter",
+)
+
+
+def __getattr__(name):
+    if name in _MOVED_TO_RUNTIME:
+        import repro.runtime as _runtime
+
+        return getattr(_runtime, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 __all__ = [
     "optimal_shares",
@@ -39,22 +60,15 @@ __all__ = [
     "SubTask",
     "ThreadWorkerPool",
     "VirtualWorkerPool",
-    "KernelSpec",
-    "CPURuntime",
-    "DynamicScheduler",
-    "StaticScheduler",
     "CoreSpec",
     "SimulatedHybridCPU",
     "make_machine",
     "MACHINES",
-    "DeviceRuntime",
-    "UnevenBatchPlanner",
-    "ExpertCapacityPlanner",
-    "ReplicaRouter",
     "KernelTuner",
     "shape_class",
     "PipelinePlan",
     "plan_stages",
     "choose_microbatches",
     "layer_costs_from_config",
+    *_MOVED_TO_RUNTIME,
 ]

@@ -1,192 +1,29 @@
-"""TPU-scale adaptation of the paper's dynamic parallel method.
+"""Deprecated shim — the pod/MoE/serving planners moved to
+:mod:`repro.runtime`.
 
-On a pod-scale machine the heterogeneous "cores" of the paper become
-heterogeneous *mesh slices* (pods / hosts): thermal throttling, co-tenant
-interference, failing-slow HBM, or mixed hardware generations all produce
-exactly the imbalance the paper measures on P/E cores.  The same three-step
-loop applies — measure per-worker times, update an EMA ratio table, dispatch
-the next round proportionally — but the "parallel dimension" being split is
-now one of:
-
-* **microbatch counts** per data-parallel pod (gradient accumulation):
-  :class:`UnevenBatchPlanner`.  Worker ``i`` runs ``k_i ∝ pr_i`` local
-  accumulation steps (no collectives inside), then a single weighted
-  all-reduce joins pods — unequal trip counts therefore cannot deadlock
-  SPMD collectives.
-* **expert capacity** in MoE dispatch: :class:`ExpertCapacityPlanner`
-  applies Eq. 3 to observed expert loads so that per-expert buffer capacity
-  tracks the realized routing distribution instead of a uniform
-  ``capacity_factor``.
-* **request-to-replica routing** for serving: :class:`ReplicaRouter` sends
-  a share of each batch to each model replica proportional to its measured
-  throughput.
-
-All planners are pure (numpy in / numpy out) so they can be unit-tested and
-run on the host between steps without touching device state.
+``repro.core.balance`` was the seed's TPU-scale adaptation of the paper's
+method, with its own private EMA loop (``DeviceRuntime``).  The
+implementation now lives in :mod:`repro.runtime.planners`, where
+``DeviceRuntime`` is a keyed :class:`repro.runtime.RatioTable` and every
+planner is a thin :class:`repro.runtime.BalancePolicy`.  Import from
+``repro.runtime`` — this module re-exports for one release and will then
+be removed.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, Optional
-
-import numpy as np
-
-from . import ratio as R
+from repro.runtime.planners import (
+    DeviceRuntime,
+    MicrobatchPlan,
+    UnevenBatchPlanner,
+    ExpertCapacityPlanner,
+    ReplicaRouter,
+)
 
 __all__ = [
     "DeviceRuntime",
+    "MicrobatchPlan",
     "UnevenBatchPlanner",
     "ExpertCapacityPlanner",
     "ReplicaRouter",
 ]
-
-
-class DeviceRuntime:
-    """Per-slice performance table, keyed by program name (≈ the paper's
-    per-ISA tables keyed by kernel).  Times come from host-side step timing
-    (``block_until_ready`` around the local accumulation loop)."""
-
-    def __init__(self, n_slices: int, alpha: float = 0.3):
-        self.n_slices = n_slices
-        self.alpha = alpha
-        self._tables: Dict[str, np.ndarray] = {}
-        self.history: Dict[str, list[np.ndarray]] = {}
-
-    def ratios(self, program: str) -> np.ndarray:
-        if program not in self._tables:
-            self._tables[program] = np.ones(self.n_slices)
-            self.history[program] = [self._tables[program].copy()]
-        return self._tables[program]
-
-    def update(self, program: str, times: np.ndarray,
-               units: Optional[np.ndarray] = None) -> np.ndarray:
-        """Update from observed wall times.
-
-        ``units`` is the work each slice actually received this round (e.g.
-        its microbatch count).  The paper's Eq. 2 assumes work was assigned
-        proportionally to the *current* table; passing ``units`` removes that
-        assumption: speed_i = units_i / times_i.
-        """
-        pr = self.ratios(program)
-        times = np.asarray(times, dtype=np.float64)
-        if units is None:
-            observed = R.observed_ratios(pr, times)
-        else:
-            units = np.asarray(units, dtype=np.float64)
-            valid = (times > 0) & (units > 0)
-            observed = pr.copy()
-            if valid.any():
-                speed = np.zeros_like(pr)
-                speed[valid] = units[valid] / times[valid]
-                observed[valid] = speed[valid] / speed[valid].sum() * valid.sum()
-        new = R.ema_update(pr, observed, self.alpha)
-        self._tables[program] = new
-        self.history[program].append(new.copy())
-        return new
-
-
-@dataclass
-class MicrobatchPlan:
-    """Per-slice microbatch counts plus the weights for gradient combine.
-
-    Gradients are averaged per-microbatch locally; the global combine is
-    ``sum_i(w_i * g_i)`` with ``w_i = k_i / sum(k)`` so the result equals the
-    plain average over all ``sum(k)`` microbatches.
-    """
-
-    counts: np.ndarray
-
-    @property
-    def total(self) -> int:
-        return int(self.counts.sum())
-
-    @property
-    def weights(self) -> np.ndarray:
-        return self.counts / max(self.total, 1)
-
-
-class UnevenBatchPlanner:
-    """Plan per-pod gradient-accumulation trip counts ∝ measured throughput.
-
-    ``min_per_slice >= 1`` keeps every pod participating (a zero-count pod
-    would contribute a zero-weight gradient but still must enter the final
-    all-reduce; giving it at least one microbatch also keeps its throughput
-    measurement alive — the paper keeps even the LP-E cores in the table).
-    """
-
-    def __init__(self, runtime: DeviceRuntime, program: str = "train_step",
-                 min_per_slice: int = 1):
-        self.runtime = runtime
-        self.program = program
-        self.min_per_slice = min_per_slice
-
-    def plan(self, total_microbatches: int) -> MicrobatchPlan:
-        n = self.runtime.n_slices
-        if total_microbatches < n * self.min_per_slice:
-            raise ValueError(
-                f"need >= {n * self.min_per_slice} microbatches for {n} slices"
-            )
-        pr = self.runtime.ratios(self.program)
-        floor = self.min_per_slice * n
-        counts = np.full(n, self.min_per_slice, dtype=np.int64)
-        counts += R.proportional_partition(total_microbatches - floor, pr)
-        return MicrobatchPlan(counts=counts)
-
-    def report(self, plan: MicrobatchPlan, times: np.ndarray) -> np.ndarray:
-        return self.runtime.update(self.program, times, units=plan.counts)
-
-
-class ExpertCapacityPlanner:
-    """Eq. 3 applied to MoE expert buffers.
-
-    A uniform capacity factor provisions every expert for the *average* load;
-    hot experts then drop tokens while cold experts waste compute — the MoE
-    incarnation of "P-cores waiting for E-cores".  This planner tracks an EMA
-    of realized expert loads and assigns per-expert capacity proportionally,
-    holding the *total* buffer (= compute cost) fixed.
-
-    Capacities are quantized to ``granularity`` (MXU-friendly multiples) and
-    floored at ``min_capacity`` so an expert can recover from a cold spell.
-    """
-
-    def __init__(self, n_experts: int, total_capacity: int, alpha: float = 0.3,
-                 min_capacity: int = 8, granularity: int = 8):
-        self.n_experts = n_experts
-        self.total_capacity = total_capacity
-        self.alpha = alpha
-        self.min_capacity = min_capacity
-        self.granularity = granularity
-        self.load_ema = np.full(n_experts, 1.0 / n_experts)
-
-    def observe(self, expert_counts: np.ndarray) -> None:
-        counts = np.asarray(expert_counts, dtype=np.float64)
-        total = counts.sum()
-        if total <= 0:
-            return
-        self.load_ema = R.ema_update(self.load_ema, counts / total, self.alpha)
-
-    def capacities(self) -> np.ndarray:
-        floor = self.min_capacity * self.n_experts
-        if floor > self.total_capacity:
-            raise ValueError("min_capacity * n_experts exceeds total capacity")
-        extra = R.proportional_partition(
-            self.total_capacity - floor, self.load_ema, self.granularity
-        )
-        return np.full(self.n_experts, self.min_capacity, dtype=np.int64) + extra
-
-
-class ReplicaRouter:
-    """Serving-side Eq. 3: route request batches across model replicas
-    proportionally to their measured decode throughput."""
-
-    def __init__(self, runtime: DeviceRuntime, program: str = "serve_step"):
-        self.runtime = runtime
-        self.program = program
-
-    def split(self, batch_size: int) -> np.ndarray:
-        pr = self.runtime.ratios(self.program)
-        return R.proportional_partition(batch_size, pr)
-
-    def report(self, counts: np.ndarray, times: np.ndarray) -> np.ndarray:
-        return self.runtime.update(self.program, times, units=counts)

@@ -7,8 +7,9 @@ onto the paper's Eq. 3:
 * **Stage balancing**: layers have unequal costs (jamba interleaves Mamba,
   attention and MoE layers) and stages may run on *heterogeneous* pods.
   The optimal contiguous split assigns each stage work proportional to its
-  pod's measured throughput — exactly `s_i = pr_i / sum(pr) * s`, with the
-  same DeviceRuntime EMA feeding `pr` from observed stage times.
+  pod's measured throughput — exactly `s_i = pr_i / sum(pr) * s`, with a
+  :class:`repro.runtime.RatioTable` EMA feeding `pr` from observed stage
+  times (pass it via ``plan_stages(..., table=..., key=...)``).
 * **Schedule accounting**: 1F1B/GPipe bubble fraction = (S-1)/(M+S-1); the
   planner picks the microbatch count that keeps the bubble under a target,
   which trades against the per-microbatch weight-grad reduction traffic
@@ -92,17 +93,25 @@ def plan_stages(
     layer_costs: Sequence[float],
     n_stages: int,
     stage_ratios: Optional[Sequence[float]] = None,
+    *,
+    table=None,
+    key: str = "pipeline_stage",
 ) -> PipelinePlan:
     """Split layers into contiguous stages minimizing the pipeline makespan.
 
-    ``stage_ratios``: per-stage pod throughput (DeviceRuntime EMAs at pod
-    granularity); defaults to uniform.  Stage s's ideal share of total work
-    is ``ratios[s]/sum(ratios)`` (Eq. 3); the DP refines to the best
+    ``stage_ratios``: per-stage pod throughput (repro.runtime RatioTable
+    EMAs at pod granularity); defaults to uniform.  Instead of a raw
+    vector, a live ``table``/``key`` (:class:`repro.runtime.RatioTable`)
+    may be given and is read for the current ratios — replan between steps
+    as stage-time feedback accumulates.  Stage s's ideal share of total
+    work is ``ratios[s]/sum(ratios)`` (Eq. 3); the DP refines to the best
     layer-boundary realization.
     """
     costs = np.asarray(layer_costs, dtype=np.float64)
     if n_stages < 1 or n_stages > len(costs):
         raise ValueError("need 1 <= n_stages <= n_layers")
+    if stage_ratios is None and table is not None:
+        stage_ratios = table.ratios(key)
     ratios = (np.ones(n_stages) if stage_ratios is None
               else np.asarray(stage_ratios, dtype=np.float64))
     if len(ratios) != n_stages:

@@ -1,157 +1,22 @@
-"""The paper's two components: CPU runtime (§2.1) and Thread scheduler (§2.2).
+"""Deprecated shim — the schedulers moved to :mod:`repro.runtime`.
 
-``CPURuntime`` owns one performance-ratio table per ISA (the paper found that
-kernels sharing a primary ISA share ratios, so tables are keyed by ISA, and
-every kernel declares its primary ISA).  ``DynamicScheduler`` splits each
-kernel's parallel dimension proportionally to the current ratios (Eq. 3),
-dispatches to the pool, then feeds observed times back through Eq. 2 + EMA.
-
-``StaticScheduler`` is the OpenMP-parallel-for baseline of the paper's
-experiments: equal-size partitions, no feedback.
+``repro.core.scheduler`` was the seed's home of the paper's CPU runtime
+(§2.1) and thread scheduler (§2.2).  The implementation now lives in
+:mod:`repro.runtime.scheduler` (``CPURuntime`` is a keyed
+:class:`repro.runtime.RatioTable`; the schedulers are thin policies over
+:class:`repro.runtime.Balancer`).  Import from ``repro.runtime`` — this
+module re-exports for one release and will then be removed.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional
+from repro.runtime.balancer import RegionStats
+from repro.runtime.scheduler import (
+    KernelSpec,
+    CPURuntime,
+    DynamicScheduler,
+    StaticScheduler,
+)
 
-import numpy as np
-
-from . import ratio as R
-from .pool import SubTask
-
-__all__ = ["KernelSpec", "CPURuntime", "DynamicScheduler", "StaticScheduler"]
-
-
-@dataclass(frozen=True)
-class KernelSpec:
-    """A parallel kernel as the scheduler sees it.
-
-    ``work_per_unit`` converts one unit of the parallel dimension into
-    abstract work (FLOPs / bytes) — used only by the virtual-time pool.
-    """
-
-    name: str
-    isa: str  # primary ISA, e.g. "avx_vnni", "avx2", "membw"
-    granularity: int = 1  # tile size along the parallel dim
-    work_per_unit: float = 1.0
-
-
-class CPURuntime:
-    """Tracks per-core performance ratios, one table per ISA (paper §2.1)."""
-
-    def __init__(self, n_workers: int, alpha: float = 0.3,
-                 init_ratio: float = 1.0, normalize: str = "mean"):
-        self.n_workers = n_workers
-        self.alpha = alpha
-        self.init_ratio = init_ratio
-        self.normalize = normalize
-        self._tables: Dict[str, np.ndarray] = {}
-        self.history: Dict[str, list[np.ndarray]] = {}
-
-    def ratios(self, isa: str) -> np.ndarray:
-        if isa not in self._tables:
-            self._tables[isa] = np.full(self.n_workers, float(self.init_ratio))
-            self.history[isa] = [self._tables[isa].copy()]
-        return self._tables[isa]
-
-    def update(self, isa: str, times: np.ndarray) -> np.ndarray:
-        """Eq. 2 followed by the EMA filter; returns the new table."""
-        pr = self.ratios(isa)
-        observed = R.observed_ratios(pr, times, normalize=self.normalize)
-        new = R.ema_update(pr, observed, self.alpha)
-        self._tables[isa] = new
-        self.history[isa].append(new.copy())
-        return new
-
-
-@dataclass
-class RegionStats:
-    """Telemetry for one dispatched parallel region."""
-
-    kernel: str
-    counts: np.ndarray
-    times: np.ndarray
-
-    @property
-    def makespan(self) -> float:
-        return float(self.times.max(initial=0.0))
-
-    @property
-    def imbalance(self) -> float:
-        """max(t)/mean(t>0) — 1.0 is perfectly balanced."""
-        active = self.times[self.times > 0]
-        if active.size == 0:
-            return 1.0
-        return float(active.max() / active.mean())
-
-
-class DynamicScheduler:
-    """Paper §2.2: proportional dispatch + feedback (the contribution)."""
-
-    def __init__(self, runtime: CPURuntime, pool):
-        self.runtime = runtime
-        self.pool = pool
-        self.stats: list[RegionStats] = []
-
-    def partition(self, kernel: KernelSpec, s: int) -> np.ndarray:
-        return R.proportional_partition(
-            s, self.runtime.ratios(kernel.isa), kernel.granularity
-        )
-
-    def dispatch(
-        self,
-        kernel: KernelSpec,
-        s: int,
-        fn: Optional[Callable[[int, int], None]] = None,
-        *,
-        update: bool = True,
-    ) -> RegionStats:
-        """Run one parallel region of size ``s`` along the kernel's dim."""
-        counts = self.partition(kernel, s)
-        subtasks, cursor = [], 0
-        for w, c in enumerate(counts):
-            subtasks.append(
-                SubTask(worker=w, start=cursor, size=int(c),
-                        work=float(c) * kernel.work_per_unit, fn=fn)
-            )
-            cursor += int(c)
-        times = self.pool.run(subtasks)
-        if update:
-            self.runtime.update(kernel.isa, times)
-        st = RegionStats(kernel=kernel.name, counts=counts, times=times)
-        self.stats.append(st)
-        return st
-
-
-class StaticScheduler:
-    """OpenMP-style balanced dispatch: every worker gets an equal slice.
-
-    This is the baseline of the paper's Fig. 2/3 ("OpenMP here uses the
-    balanced work dispatch algorithm. Each thread computes the same size of
-    sub-matrix").
-    """
-
-    def __init__(self, pool):
-        self.pool = pool
-        self.stats: list[RegionStats] = []
-
-    def dispatch(
-        self,
-        kernel: KernelSpec,
-        s: int,
-        fn: Optional[Callable[[int, int], None]] = None,
-    ) -> RegionStats:
-        n = self.pool.n_workers
-        counts = R.proportional_partition(s, np.ones(n), kernel.granularity)
-        subtasks, cursor = [], 0
-        for w, c in enumerate(counts):
-            subtasks.append(
-                SubTask(worker=w, start=cursor, size=int(c),
-                        work=float(c) * kernel.work_per_unit, fn=fn)
-            )
-            cursor += int(c)
-        times = self.pool.run(subtasks)
-        st = RegionStats(kernel=kernel.name, counts=counts, times=times)
-        self.stats.append(st)
-        return st
+__all__ = ["KernelSpec", "CPURuntime", "DynamicScheduler", "StaticScheduler",
+           "RegionStats"]

@@ -18,9 +18,11 @@ Fault tolerance at this layer:
   * elastic restarts with a different host count reshard the checkpoint on
     restore (repro.checkpoint supports cross-mesh restore);
   * straggler mitigation is the paper's method: per-pod step times ->
-    DeviceRuntime -> UnevenBatchPlanner microbatch counts; pods accumulate
-    locally (no collectives) and join in one weighted all-reduce, so a
-    slow pod never blocks lockstep collectives mid-accumulation.
+    repro.runtime.RatioTable -> UnevenBatchPlanner microbatch counts; pods
+    accumulate locally (no collectives) and join in one weighted
+    all-reduce, so a slow pod never blocks lockstep collectives
+    mid-accumulation.  The table persists via repro.runtime.RatioStore, so
+    an elastic restart warm-starts from the last measured ratios.
 """
 
 from __future__ import annotations

@@ -11,15 +11,17 @@ scale):
   * sharded lowering when >1 device is available (data x model mesh),
   * atomic checkpointing + automatic resume (kill the process mid-run and
     relaunch: it continues from the last step, data stream repositioned),
-  * straggler telemetry: per-step wall times feed a DeviceRuntime table
-    (at pod scale the UnevenBatchPlanner turns this into per-pod
-    microbatch counts — see examples/uneven_dp.py).
+  * straggler telemetry: per-step wall times feed a repro.runtime
+    RatioTable persisted next to the checkpoints (RatioStore), so ratios
+    warm-start across restarts; at pod scale the UnevenBatchPlanner turns
+    this table into per-pod microbatch counts — see examples/train_100m.py.
 """
 
 from __future__ import annotations
 
 import argparse
 import math
+import os
 import time
 
 import jax
@@ -28,7 +30,7 @@ import numpy as np
 
 from repro.checkpoint import latest_step, restore, save
 from repro.configs import get_config, reduced_config
-from repro.core.balance import DeviceRuntime
+from repro.runtime import RatioStore, RatioTable
 from repro.data import DataConfig, Prefetcher, SyntheticLM
 from repro.models import init_params
 from repro.training import AdamWConfig, init_opt_state, make_train_step
@@ -82,7 +84,16 @@ def main() -> int:
             print(f"[train] resumed from step {last}")
 
     step_fn = jax.jit(make_train_step(cfg, opt_cfg, remat=True))
-    runtime = DeviceRuntime(n_slices=1)  # per-pod table at scale
+    table = RatioTable(n_workers=1)  # per-pod table at scale
+    store = (RatioStore(os.path.join(args.ckpt_dir, "ratios.json"))
+             if args.ckpt_dir else None)
+    if store is not None:
+        try:
+            if store.load_into(table):
+                print("[train] warm-started performance ratios from",
+                      store.path)
+        except Exception as e:  # corrupt sidecar must not block training
+            print(f"[train] ignoring unreadable ratio store ({e})")
     it = Prefetcher(iter(data), depth=2)
 
     t_start = time.time()
@@ -93,7 +104,7 @@ def main() -> int:
         params, opt, metrics = step_fn(params, opt, batch)
         metrics["loss"].block_until_ready()
         dt = time.perf_counter() - t0
-        runtime.update("train_step", np.array([dt]))
+        table.update("train_step", np.array([dt]))
         if (step + 1) % args.log_every == 0:
             toks = args.global_batch * args.seq_len / dt
             print(f"[train] step {step + 1} loss={float(metrics['loss']):.4f} "
@@ -102,9 +113,11 @@ def main() -> int:
         if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
             save(args.ckpt_dir, step + 1, {"params": params, "opt": opt},
                  extra={"data_step": data.step})
+            store.save(table)
     if args.ckpt_dir:
         save(args.ckpt_dir, args.steps, {"params": params, "opt": opt},
              extra={"data_step": data.step})
+        store.save(table)
     print(f"[train] done in {time.time() - t_start:.1f}s")
     it.close()
     return 0

@@ -11,7 +11,7 @@ collectives.
 Paper integration (first-class): expert load imbalance is the MoE
 incarnation of the paper's hybrid-core imbalance.  Two Eq.-3 mechanisms:
 
-* :func:`repro.core.balance.ExpertCapacityPlanner` retunes the static
+* :class:`repro.runtime.ExpertCapacityPlanner` retunes the static
   capacity between recompiles from the load EMA (slow loop);
 * :func:`balanced_expert_assignment` (here) computes an LPT expert->shard
   permutation from the load EMA so each EP shard carries equal expected

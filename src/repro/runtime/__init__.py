@@ -1,0 +1,67 @@
+"""repro.runtime — the single home of the paper's dynamic parallel method.
+
+One stack, four layers of callers::
+
+    RatioTable / RatioStore      keyed EMA ratio tables (Eq. 2), persisted
+        |
+    BalancePolicy (plan/report)  proportional split (Eq. 3) + feedback
+        |
+    Balancer / balanced_region   timing, automatic feedback, RegionStats
+        |
+    domain frontends             DynamicScheduler (CPU kernels),
+                                 UnevenBatchPlanner (uneven DP),
+                                 ExpertCapacityPlanner (MoE capacity),
+                                 ReplicaRouter (serving)
+
+The seed's ``repro.core.scheduler`` and ``repro.core.balance`` remain as
+deprecation shims re-exporting from here.
+"""
+
+from .table import RatioTable, RatioStore
+from .policy import (
+    Plan,
+    BalancePolicy,
+    ProportionalPolicy,
+    EvenPolicy,
+    clamp_to_capacity,
+)
+from .balancer import RegionStats, StatsSink, ListSink, Region, Balancer
+from .scheduler import (
+    KernelSpec,
+    CPURuntime,
+    DynamicScheduler,
+    StaticScheduler,
+    run_plan,
+)
+from .planners import (
+    DeviceRuntime,
+    MicrobatchPlan,
+    UnevenBatchPlanner,
+    ExpertCapacityPlanner,
+    ReplicaRouter,
+)
+
+__all__ = [
+    "RatioTable",
+    "RatioStore",
+    "Plan",
+    "BalancePolicy",
+    "ProportionalPolicy",
+    "EvenPolicy",
+    "clamp_to_capacity",
+    "RegionStats",
+    "StatsSink",
+    "ListSink",
+    "Region",
+    "Balancer",
+    "KernelSpec",
+    "CPURuntime",
+    "DynamicScheduler",
+    "StaticScheduler",
+    "run_plan",
+    "DeviceRuntime",
+    "MicrobatchPlan",
+    "UnevenBatchPlanner",
+    "ExpertCapacityPlanner",
+    "ReplicaRouter",
+]

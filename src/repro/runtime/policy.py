@@ -1,0 +1,164 @@
+"""Balance policies: how a total amount of parallel work becomes a plan.
+
+A :class:`BalancePolicy` owns the two halves of the paper's control loop —
+
+    plan(total)         -> Plan      (Eq. 3: proportional split)
+    report(plan, times) -> ratios    (Eq. 2 + EMA feedback)
+
+— over whatever domain the policy is configured for.  Policies are pure
+host-side objects (numpy in / numpy out); the :class:`~repro.runtime.
+balancer.Balancer` facade adds timing, telemetry, and the context-manager
+lifecycle on top.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.ratio import proportional_partition
+
+from .table import RatioTable
+
+__all__ = [
+    "Plan",
+    "BalancePolicy",
+    "ProportionalPolicy",
+    "EvenPolicy",
+    "clamp_to_capacity",
+]
+
+
+@dataclass(frozen=True)
+class Plan:
+    """One round's work assignment: per-worker counts along the parallel
+    dimension, plus the key it was planned under."""
+
+    counts: np.ndarray
+    key: str = ""
+    granularity: int = 1
+
+    @property
+    def n_workers(self) -> int:
+        return len(self.counts)
+
+    @property
+    def total(self) -> int:
+        return int(np.asarray(self.counts).sum())
+
+    @property
+    def weights(self) -> np.ndarray:
+        """Fractional shares — e.g. the gradient-combine weights for uneven
+        data parallelism (``sum_i w_i g_i`` equals the plain average over
+        all ``total`` microbatches)."""
+        return np.asarray(self.counts, dtype=np.float64) / max(self.total, 1)
+
+    @property
+    def ranges(self) -> list:
+        """Contiguous ``[start, end)`` per worker (the paper splits one
+        dimension into contiguous blocks, preserving cache locality)."""
+        out, cursor = [], 0
+        for c in self.counts:
+            out.append((cursor, cursor + int(c)))
+            cursor += int(c)
+        return out
+
+
+@runtime_checkable
+class BalancePolicy(Protocol):
+    """The plan/report lifecycle every balancing domain implements."""
+
+    def plan(self, total: int) -> Plan: ...
+
+    def report(self, plan: Plan, times) -> np.ndarray: ...
+
+
+@dataclass
+class ProportionalPolicy:
+    """The paper's policy: split ``total`` proportionally to ``table``'s
+    current ratios for ``key`` (Eq. 3), feed observed times back (Eq. 2).
+
+    ``min_per_worker >= 1`` keeps every worker participating (a zero-count
+    worker loses its throughput measurement; the paper keeps even LP-E
+    cores in the table).  ``feedback`` selects the Eq.-2 variant:
+    ``"times"`` assumes this round's work was proportional to the current
+    table; ``"units"`` reports the realized per-worker counts so the update
+    holds even when the plan was clamped or floored.
+    """
+
+    table: RatioTable
+    key: str
+    granularity: int = 1
+    min_per_worker: int = 0
+    feedback: str = "times"
+
+    def __post_init__(self) -> None:
+        if self.feedback not in ("times", "units"):
+            raise ValueError("feedback must be 'times' or 'units'")
+
+    @property
+    def n_workers(self) -> int:
+        return self.table.n_workers
+
+    def plan(self, total: int) -> Plan:
+        n = self.table.n_workers
+        floor = self.min_per_worker * n
+        if total < floor:
+            raise ValueError(
+                f"need >= {floor} units for {n} workers "
+                f"(min_per_worker={self.min_per_worker})")
+        counts = np.full(n, self.min_per_worker, dtype=np.int64)
+        counts += proportional_partition(total - floor,
+                                         self.table.ratios(self.key),
+                                         self.granularity)
+        return Plan(counts=counts, key=self.key, granularity=self.granularity)
+
+    def report(self, plan: Plan, times) -> np.ndarray:
+        units = np.asarray(plan.counts) if self.feedback == "units" else None
+        return self.table.update(self.key, times, units=units)
+
+
+@dataclass
+class EvenPolicy:
+    """The static (OpenMP balanced parallel-for) baseline: equal shares,
+    no feedback."""
+
+    n_workers: int
+    granularity: int = 1
+    key: str = "static"
+
+    def plan(self, total: int) -> Plan:
+        counts = proportional_partition(total, np.ones(self.n_workers),
+                                        self.granularity)
+        return Plan(counts=counts, key=self.key, granularity=self.granularity)
+
+    def report(self, plan: Plan, times) -> np.ndarray:
+        return np.ones(self.n_workers)
+
+
+def clamp_to_capacity(counts, capacities) -> np.ndarray:
+    """Clamp a plan's counts to per-worker capacities, redistributing the
+    overflow to workers with headroom (largest headroom first).
+
+    Raises ``ValueError`` when the total exceeds the aggregate capacity —
+    no single-round assignment can serve it.
+    """
+    counts = np.asarray(counts, dtype=np.int64).copy()
+    caps = np.asarray(capacities, dtype=np.int64)
+    if counts.shape != caps.shape:
+        raise ValueError("counts and capacities must have the same shape")
+    total = int(counts.sum())
+    if total > int(caps.sum()):
+        raise ValueError(
+            f"total work {total} exceeds aggregate capacity {int(caps.sum())}")
+    counts = np.minimum(counts, caps)
+    excess = total - int(counts.sum())
+    while excess > 0:
+        headroom = caps - counts
+        i = int(np.argmax(headroom))
+        take = min(excess, int(headroom[i]))
+        counts[i] += take
+        excess -= take
+    return counts

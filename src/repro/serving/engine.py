@@ -3,10 +3,12 @@ paper's dynamic replica routing.
 
 ``ServeEngine`` drives one model replica (jit'd prefill + decode-step).
 ``RoutedServer`` composes several replicas behind the paper's Eq.-3 router
-(:class:`repro.core.balance.ReplicaRouter`): each batch of requests is split
-across replicas proportionally to their measured decode throughput — the
-serving analogue of proportional core dispatch (useful when replicas live on
-heterogeneous pods or are co-tenanted).
+(:class:`repro.runtime.ReplicaRouter` driven through a
+:class:`repro.runtime.Balancer`): each batch of requests is split across
+replicas proportionally to their measured decode throughput — the serving
+analogue of proportional core dispatch (useful when replicas live on
+heterogeneous pods or are co-tenanted).  Splits are clamped to per-replica
+batch capacity with the overflow redistributed to replicas with headroom.
 """
 
 from __future__ import annotations
@@ -21,8 +23,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.balance import DeviceRuntime, ReplicaRouter
 from repro.models import forward, init_state
+from repro.runtime import (
+    Balancer,
+    DeviceRuntime,
+    Plan,
+    ReplicaRouter,
+    StatsSink,
+    clamp_to_capacity,
+)
 
 
 @dataclass
@@ -102,32 +111,46 @@ class RoutedServer:
     """Paper Eq. 3 at the serving layer: proportional request routing
     across replicas with measured-throughput feedback."""
 
-    def __init__(self, engines: Sequence[ServeEngine]):
+    def __init__(self, engines: Sequence[ServeEngine],
+                 sink: Optional[StatsSink] = None):
         self.engines = list(engines)
         self.runtime = DeviceRuntime(n_slices=len(engines), alpha=0.3)
         self.router = ReplicaRouter(self.runtime)
+        # keep_stats=False: a serving process is long-lived; per-batch
+        # telemetry goes to the sink, not an unbounded list.
+        self.balancer = Balancer(self.router, sink=sink, keep_stats=False)
+
+    @property
+    def capacities(self) -> np.ndarray:
+        return np.array([e.batch_size for e in self.engines], dtype=np.int64)
 
     def serve_batch(self, prompts: np.ndarray, n_steps: int,
                     times_override: Optional[np.ndarray] = None):
         """Split ``prompts`` across replicas ∝ current ratios; run; feed
         times back.  ``times_override`` lets tests/benchmarks inject
         simulated heterogeneous replica speeds."""
-        counts = self.router.split(len(prompts))
-        results, times = [], np.zeros(len(self.engines))
-        start = 0
-        for i, (eng, c) in enumerate(zip(self.engines, counts)):
-            if c == 0:
-                continue
-            chunk = prompts[start:start + c]
-            start += c
-            pad = eng.batch_size - len(chunk)
-            padded = np.pad(chunk, ((0, pad), (0, 0))) if pad else chunk
-            t0 = time.perf_counter()
-            r = eng.generate(jnp.asarray(padded), n_steps)
-            dt = time.perf_counter() - t0
-            times[i] = dt
-            results.append(r.tokens[: len(chunk)])
-        if times_override is not None:
-            times = times_override
-        self.router.report(counts, times)
-        return np.concatenate(results, axis=0), counts, times
+        if len(prompts) == 0:
+            return (np.zeros((0, prompts.shape[1] + n_steps),
+                             dtype=prompts.dtype),
+                    np.zeros(len(self.engines), dtype=np.int64),
+                    np.zeros(len(self.engines)))
+        # The proportional split can exceed a fast replica's static batch
+        # size; clamp to capacity and hand the overflow to other replicas.
+        planned = self.balancer.plan(len(prompts))
+        counts = clamp_to_capacity(planned.counts, self.capacities)
+        plan = Plan(counts=counts, key=planned.key)
+        with self.balancer.balanced_region(plan=plan) as region:
+            results, start = [], 0
+            for i, (eng, c) in enumerate(zip(self.engines, counts)):
+                if c == 0:
+                    continue
+                chunk = prompts[start:start + c]
+                start += c
+                pad = eng.batch_size - len(chunk)
+                padded = np.pad(chunk, ((0, pad), (0, 0))) if pad else chunk
+                with region.timed(i):
+                    r = eng.generate(jnp.asarray(padded), n_steps)
+                results.append(r.tokens[: len(chunk)])
+            if times_override is not None:
+                region.times[:] = np.asarray(times_override, dtype=np.float64)
+        return np.concatenate(results, axis=0), counts, region.times

@@ -2,7 +2,7 @@
 
 The *uneven* path is the paper's method at pod scale: each data-parallel
 slice runs ``k_i`` local accumulation steps (k_i from
-:class:`repro.core.balance.UnevenBatchPlanner`, proportional to measured
+:class:`repro.runtime.UnevenBatchPlanner`, proportional to measured
 throughput).  Local accumulation contains **no collectives**, so unequal
 trip counts cannot deadlock SPMD; a single weighted combine
 (sum_i w_i g_i, w_i = k_i/sum k) equals the plain average over all

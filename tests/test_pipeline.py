@@ -2,7 +2,6 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.core.pipeline import (
@@ -40,23 +39,32 @@ def test_unequal_layer_costs():
     assert plan.makespan_per_microbatch == pytest.approx(best)
 
 
-@given(
-    st.lists(st.floats(min_value=0.1, max_value=10), min_size=4, max_size=24),
-    st.integers(min_value=1, max_value=4),
-)
-@settings(max_examples=30, deadline=None)
-def test_dp_beats_or_matches_even_split(costs, n_stages):
-    n_stages = min(n_stages, len(costs))
-    plan = plan_stages(costs, n_stages)
-    # compare against the naive equal-count split
-    n = len(costs)
-    step = n // n_stages
-    bounds = [min(i * step, n) for i in range(n_stages)] + [n]
-    naive = max(sum(costs[bounds[s]: bounds[s + 1]]) for s in range(n_stages))
-    assert plan.makespan_per_microbatch <= naive + 1e-9
-    # partition invariants
-    assert plan.boundaries[0] == 0 and plan.boundaries[-1] == n
-    assert all(b2 > b1 for b1, b2 in zip(plan.boundaries, plan.boundaries[1:]))
+def test_dp_beats_or_matches_even_split():
+    pytest.importorskip("hypothesis", reason="property test needs the dev extra")
+    from hypothesis import given, settings, strategies as st
+
+    @given(
+        st.lists(st.floats(min_value=0.1, max_value=10), min_size=4,
+                 max_size=24),
+        st.integers(min_value=1, max_value=4),
+    )
+    @settings(max_examples=30, deadline=None)
+    def check(costs, n_stages):
+        n_stages = min(n_stages, len(costs))
+        plan = plan_stages(costs, n_stages)
+        # compare against the naive equal-count split
+        n = len(costs)
+        step = n // n_stages
+        bounds = [min(i * step, n) for i in range(n_stages)] + [n]
+        naive = max(sum(costs[bounds[s]: bounds[s + 1]])
+                    for s in range(n_stages))
+        assert plan.makespan_per_microbatch <= naive + 1e-9
+        # partition invariants
+        assert plan.boundaries[0] == 0 and plan.boundaries[-1] == n
+        assert all(b2 > b1
+                   for b1, b2 in zip(plan.boundaries, plan.boundaries[1:]))
+
+    check()
 
 
 def test_jamba_stage_plan_isolates_moe_attention_load():

@@ -1,0 +1,293 @@
+"""Tests for the unified repro.runtime Balancer API.
+
+Covers: partition invariants (sum / granularity / floor), convergence of
+the full table -> policy -> balancer loop under a fixed heterogeneous
+simulator, RatioStore save/load round-trip, the normalization regression
+pinning both seed behaviors (CPURuntime mean vs DeviceRuntime units path),
+capacity clamping, the balanced_region lifecycle, and the repro.core
+deprecation shims.
+"""
+
+import numpy as np
+import pytest
+
+from repro.runtime import (
+    Balancer,
+    CPURuntime,
+    DeviceRuntime,
+    EvenPolicy,
+    ListSink,
+    Plan,
+    ProportionalPolicy,
+    RatioStore,
+    RatioTable,
+    RegionStats,
+    clamp_to_capacity,
+)
+
+
+# ------------------------------------------------------- plan invariants --
+@pytest.mark.parametrize("total", [0, 1, 7, 64, 1000, 4096])
+@pytest.mark.parametrize("granularity", [1, 3, 8, 16])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_plan_sums_to_total_and_respects_granularity(total, granularity, seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 12))
+    table = RatioTable(n)
+    table.set("k", rng.uniform(0.1, 5.0, size=n))
+    policy = ProportionalPolicy(table, "k", granularity=granularity)
+    plan = policy.plan(total)
+    assert plan.total == total
+    assert np.all(plan.counts >= 0)
+    # every worker's count is a granularity multiple except the largest-
+    # share worker, which absorbs the non-divisible remainder
+    off_grid = np.nonzero(plan.counts % granularity)[0]
+    assert len(off_grid) <= 1
+    # contiguous ranges tile [0, total)
+    ranges = plan.ranges
+    assert ranges[0][0] == 0 and ranges[-1][1] == total
+    for (a, b), (c, d) in zip(ranges, ranges[1:]):
+        assert b == c
+
+
+def test_plan_min_per_worker_floor():
+    table = RatioTable(4)
+    table.set("k", np.array([100.0, 1e-6, 1e-6, 1e-6]))
+    policy = ProportionalPolicy(table, "k", min_per_worker=1)
+    plan = policy.plan(8)
+    assert plan.total == 8
+    assert np.all(plan.counts >= 1)
+    with pytest.raises(ValueError):
+        policy.plan(3)
+
+
+def test_plan_property_based():
+    pytest.importorskip("hypothesis", reason="property test needs the dev extra")
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.integers(min_value=0, max_value=100_000),
+           st.integers(min_value=1, max_value=64),
+           st.lists(st.floats(min_value=0.01, max_value=100),
+                    min_size=1, max_size=32))
+    @settings(max_examples=50, deadline=None)
+    def check(total, granularity, ratios):
+        table = RatioTable(len(ratios))
+        table.set("k", np.asarray(ratios))
+        plan = ProportionalPolicy(table, "k", granularity=granularity).plan(total)
+        assert plan.total == total
+        assert np.all(plan.counts >= 0)
+        assert (plan.counts % granularity != 0).sum() <= 1
+
+    check()
+
+
+# ---------------------------------------------------------- convergence --
+def test_loop_converges_on_fixed_heterogeneous_simulator():
+    """The full plan -> simulate -> report loop converges: counts become
+    proportional to the true speeds and the ratio trace goes quiet."""
+    speeds = np.array([4.0, 2.0, 1.0, 1.0])
+    table = RatioTable(4, alpha=0.3)
+    bal = Balancer(ProportionalPolicy(table, "sim"))
+    plan = bal.plan(64)
+    for _ in range(40):
+        times = np.where(plan.counts > 0, plan.counts / speeds, 0.0)
+        bal.report(plan, times)
+        plan = bal.plan(64)
+    np.testing.assert_array_equal(plan.counts, [32, 16, 8, 8])
+    # ratios match mean-normalized true speeds
+    np.testing.assert_allclose(table.ratios("sim"),
+                               speeds / speeds.mean(), rtol=0.05)
+    # steady state: the last few tables are essentially identical
+    tail = table.history["sim"][-3:]
+    np.testing.assert_allclose(tail[0], tail[-1], rtol=1e-3)
+
+
+def test_even_policy_is_static():
+    bal = Balancer(EvenPolicy(4))
+    plan = bal.plan(64)
+    np.testing.assert_array_equal(plan.counts, [16, 16, 16, 16])
+    bal.report(plan, np.array([8.0, 1.0, 1.0, 1.0]))
+    np.testing.assert_array_equal(bal.plan(64).counts, [16, 16, 16, 16])
+
+
+# ------------------------------------------------------- normalization ---
+def test_normalization_regression_cpu_mean():
+    """Pin the seed CPURuntime behavior: normalize='mean' keeps an all-equal
+    table at 1.0 (paper Fig. 4 magnitudes), 'sum' gives the literal Eq. 2."""
+    mean_rt = CPURuntime(2, alpha=0.0)
+    mean_rt.update("isa", np.array([1.0, 1.0]))
+    np.testing.assert_allclose(mean_rt.ratios("isa"), [1.0, 1.0])
+
+    sum_rt = CPURuntime(2, alpha=0.0, normalize="sum")
+    sum_rt.update("isa", np.array([1.0, 1.0]))
+    np.testing.assert_allclose(sum_rt.ratios("isa"), [0.5, 0.5])
+
+
+def test_normalization_regression_units_path():
+    """Pin the seed DeviceRuntime units path: mean-normalized over valid
+    entries (speed [3,1] -> observed [1.5, 0.5]), and show the same knob
+    now controls it (normalize='sum' -> [0.75, 0.25])."""
+    rt = DeviceRuntime(n_slices=2, alpha=0.0)
+    rt.update("p", times=np.array([1.0, 1.0]), units=np.array([3.0, 1.0]))
+    np.testing.assert_allclose(rt.ratios("p"), [1.5, 0.5])
+
+    rt_sum = RatioTable(2, alpha=0.0, normalize="sum")
+    rt_sum.update("p", times=np.array([1.0, 1.0]), units=np.array([3.0, 1.0]))
+    np.testing.assert_allclose(rt_sum.ratios("p"), [0.75, 0.25])
+
+
+def test_units_path_skips_idle_workers():
+    rt = RatioTable(3, alpha=0.0)
+    rt.update("p", times=np.array([1.0, 1.0, 0.0]),
+              units=np.array([2.0, 2.0, 0.0]))
+    pr = rt.ratios("p")
+    assert pr[2] == 1.0  # idle worker's ratio carried over
+    np.testing.assert_allclose(pr[:2], [1.0, 1.0])
+
+
+# -------------------------------------------------------------- history ---
+def test_history_is_bounded():
+    rt = RatioTable(2, max_history=5)
+    for _ in range(20):
+        rt.update("k", np.array([1.0, 2.0]))
+    assert len(rt.history["k"]) == 5
+
+
+# ---------------------------------------------------------- persistence ---
+def test_ratio_store_roundtrip(tmp_path):
+    table = RatioTable(3, alpha=0.25, init_ratio=2.0, normalize="sum")
+    table.update("gemm", np.array([1.0, 2.0, 4.0]))
+    table.update("gemv", np.array([2.0, 2.0, 1.0]))
+    store = RatioStore(str(tmp_path / "sub" / "ratios.json"))
+    assert not store.exists()
+    store.save(table)
+    loaded = store.load()
+    assert loaded is not None
+    assert loaded.n_workers == 3
+    assert loaded.alpha == 0.25
+    assert loaded.normalize == "sum"
+    assert sorted(loaded.keys()) == ["gemm", "gemv"]
+    for key in table.keys():
+        np.testing.assert_allclose(loaded.ratios(key), table.ratios(key))
+
+
+def test_ratio_store_load_into(tmp_path):
+    src = RatioTable(2)
+    src.update("k", np.array([1.0, 3.0]))
+    store = RatioStore(str(tmp_path / "ratios.json"))
+    store.save(src)
+    dst = RatioTable(2)
+    assert store.load_into(dst)
+    np.testing.assert_allclose(dst.ratios("k"), src.ratios("k"))
+    # mismatched worker count: refuse, leave target untouched
+    other = RatioTable(5)
+    assert not store.load_into(other)
+    assert other.keys() == []
+    # missing file
+    assert RatioStore(str(tmp_path / "nope.json")).load() is None
+
+
+def test_warm_start_skips_cold_start_imbalance(tmp_path):
+    """The point of persistence: a warm-started run plans proportionally
+    from dispatch #1 instead of re-learning the machine."""
+    speeds = np.array([3.0, 1.0])
+    table = RatioTable(2, alpha=0.3)
+    bal = Balancer(ProportionalPolicy(table, "k"))
+    plan = bal.plan(16)
+    for _ in range(30):
+        bal.report(plan, plan.counts / speeds)
+        plan = bal.plan(16)
+    store = RatioStore(str(tmp_path / "ratios.json"))
+    store.save(table)
+
+    fresh = RatioTable(2, alpha=0.3)
+    assert RatioStore(store.path).load_into(fresh)
+    first = ProportionalPolicy(fresh, "k").plan(16)
+    np.testing.assert_array_equal(first.counts, [12, 4])
+
+
+# ------------------------------------------------------ balancer/region ---
+def test_balanced_region_times_and_feeds_back():
+    table = RatioTable(2, alpha=0.0)
+    sink = ListSink()
+    bal = Balancer(ProportionalPolicy(table, "r"), sink=sink)
+    with bal.balanced_region(8) as region:
+        np.testing.assert_array_equal(region.counts, [4, 4])
+        for w in range(2):
+            with region.timed(w):
+                pass
+        # deterministic times for the assertion: worker 1 is 3x slower
+        region.times[:] = [1.0, 3.0]
+    assert isinstance(region.stats, RegionStats)
+    assert region.stats.makespan == 3.0
+    assert region.stats.imbalance == pytest.approx(1.5)
+    assert len(sink.records) == 1 and sink.records[0] is region.stats
+    assert bal.plan(8).counts[0] > bal.plan(8).counts[1]  # fed back
+
+
+def test_balanced_region_no_feedback_on_exception():
+    table = RatioTable(2, alpha=0.0)
+    bal = Balancer(ProportionalPolicy(table, "r"))
+    with pytest.raises(RuntimeError):
+        with bal.balanced_region(8) as region:
+            raise RuntimeError("kernel failed")
+    np.testing.assert_allclose(table.ratios("r"), [1.0, 1.0])
+    assert bal.stats == []
+
+
+def test_region_timed_accumulates_real_time():
+    import time
+    table = RatioTable(1)
+    bal = Balancer(ProportionalPolicy(table, "t"))
+    with bal.balanced_region(4) as region:
+        with region.timed(0):
+            time.sleep(0.01)
+    assert region.times[0] >= 0.01
+    assert region.stats.ratios is not None
+
+
+# ------------------------------------------------------------- clamping ---
+def test_clamp_to_capacity():
+    counts = clamp_to_capacity([7, 1], [4, 4])
+    np.testing.assert_array_equal(counts, [4, 4])
+    counts = clamp_to_capacity([5, 1, 0], [4, 4, 4])
+    assert counts.sum() == 6 and np.all(counts <= 4)
+    np.testing.assert_array_equal(clamp_to_capacity([2, 2], [4, 4]), [2, 2])
+    with pytest.raises(ValueError):
+        clamp_to_capacity([5, 5], [4, 4])
+
+
+# ----------------------------------------------------- deprecation shims --
+def test_core_shims_resolve_to_runtime():
+    import repro.core
+    import repro.core.balance as balance
+    import repro.core.scheduler as scheduler
+    import repro.runtime as runtime
+
+    assert repro.core.CPURuntime is runtime.CPURuntime
+    assert repro.core.DeviceRuntime is runtime.DeviceRuntime
+    assert scheduler.DynamicScheduler is runtime.DynamicScheduler
+    assert scheduler.RegionStats is runtime.RegionStats
+    assert balance.UnevenBatchPlanner is runtime.UnevenBatchPlanner
+    assert balance.ExpertCapacityPlanner is runtime.ExpertCapacityPlanner
+    assert balance.ReplicaRouter is runtime.ReplicaRouter
+    # RegionStats keeps its seed-era .kernel alias
+    st = runtime.RegionStats(key="k", counts=np.array([1]),
+                             times=np.array([1.0]))
+    assert st.kernel == "k"
+
+
+def test_planners_are_balance_policies():
+    from repro.runtime import BalancePolicy, UnevenBatchPlanner
+
+    table = DeviceRuntime(n_slices=2)
+    planner = UnevenBatchPlanner(table)
+    assert isinstance(planner, BalancePolicy)
+    plan = planner.plan(8)
+    assert isinstance(plan, Plan)
+    assert plan.total == 8
+    np.testing.assert_allclose(plan.weights.sum(), 1.0)
+    # Balancer drives any planner uniformly
+    bal = Balancer(planner)
+    st = bal.report(plan, np.array([1.0, 2.0]))
+    assert st.ratios is not None

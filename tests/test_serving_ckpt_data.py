@@ -52,6 +52,38 @@ def test_routed_server_adapts_to_slow_replica():
     assert out.shape[0] == 8
 
 
+def test_routed_server_clamps_split_to_replica_capacity():
+    """A replica's proportional share can exceed its static batch size; the
+    overflow must be redistributed instead of crashing the pad path."""
+    params = init_params(CFG, KEY)
+    engines = [ServeEngine(CFG, params, batch_size=4, max_seq=16)
+               for _ in range(2)]
+    srv = RoutedServer(engines)
+    # Make replica 0 look 7x faster: the raw Eq.-3 split of 8 would be
+    # [7, 1], over replica 0's capacity of 4.
+    srv.runtime.set("serve_step", np.array([7.0, 1.0]))
+    prompts = np.random.default_rng(1).integers(0, 128, size=(8, 4),
+                                                dtype=np.int32)
+    out, counts, _ = srv.serve_batch(prompts, n_steps=2)
+    assert counts.sum() == 8
+    assert np.all(counts <= 4)
+    assert out.shape[0] == 8
+    # ...but a batch beyond aggregate capacity is a real error
+    big = np.zeros((9, 4), dtype=np.int32)
+    with pytest.raises(ValueError):
+        srv.serve_batch(big, n_steps=1)
+
+
+def test_routed_server_empty_batch():
+    params = init_params(CFG, KEY)
+    engines = [ServeEngine(CFG, params, batch_size=2, max_seq=16)]
+    srv = RoutedServer(engines)
+    out, counts, times = srv.serve_batch(
+        np.zeros((0, 4), dtype=np.int32), n_steps=3)
+    assert out.shape == (0, 7)
+    assert counts.sum() == 0 and times.sum() == 0.0
+
+
 # ------------------------------------------------------------ checkpoint --
 def test_checkpoint_roundtrip_and_resume(tmp_path):
     params = init_params(CFG, KEY)
