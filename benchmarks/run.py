@@ -12,11 +12,11 @@ import sys
 
 def main() -> None:
     from . import bench_gemm_parallel, bench_gemv_bandwidth, bench_e2e
-    from . import bench_ratio_trace, bench_kernels
+    from . import bench_ratio_trace, bench_kernels, bench_serving
 
     rows = []
     for mod in (bench_gemm_parallel, bench_gemv_bandwidth, bench_e2e,
-                bench_ratio_trace, bench_kernels):
+                bench_ratio_trace, bench_kernels, bench_serving):
         rows += mod.run()
 
     print("name,us_per_call,derived")

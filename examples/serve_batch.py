@@ -1,6 +1,11 @@
 """Batched serving with heterogeneous replicas: the paper's Eq. 3 routes
 requests proportionally to measured replica throughput.
 
+This is the seed-era *whole-batch* API; ``serve_batch`` now executes
+through the continuous-batching engine under the hood.  For request-level
+serving (no batch barrier, per-phase ratios) see
+``examples/continuous_serving.py``.
+
   PYTHONPATH=src python examples/serve_batch.py
 """
 

@@ -61,7 +61,11 @@ def observed_ratios(
     ``pr_i``, it took ``t_i``, hence speed ``pr_i/t_i``), renormalized.
 
     Workers that received no work report ``t_i == 0`` (or NaN); their ratio
-    is carried over unchanged (renormalized with the rest).
+    is carried over unchanged (renormalized with the rest).  A round in
+    which only *one* of several workers was measured is also carried over
+    whole: a singleton observation has no relative information, and
+    normalizing it (to 1.0 under "mean") would erase whatever
+    heterogeneity the table has already learned.
     """
     ratios = np.asarray(ratios, dtype=np.float64)
     times = np.asarray(times, dtype=np.float64)
@@ -69,7 +73,7 @@ def observed_ratios(
         raise ValueError("ratios and times must have the same shape")
     n = len(ratios)
     valid = np.isfinite(times) & (times > 0) & (ratios > 0)
-    if not np.any(valid):
+    if not np.any(valid) or (n > 1 and valid.sum() == 1):
         return ratios.copy()
     if normalize not in ("mean", "sum"):
         raise ValueError("normalize must be 'mean' or 'sum'")

@@ -1,32 +1,77 @@
-"""Serving driver: batched greedy generation on any assigned arch (reduced
-preset on CPU), with the paper's dynamic replica routing when more than one
-replica is requested.
+"""Serving driver: request-level continuous batching with open-loop
+(seeded Poisson) traffic, phase-aware ratio learning, and dynamic replica
+routing.
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --preset tiny \
-      --batch 4 --prompt-len 16 --steps 32
+      --replicas 2 --requests 8 --prompt-len 16 --steps 8 --rate 20
+
+Modes:
+* default — continuous batching: requests arrive open-loop and are routed
+  to replicas by measured per-phase throughput; each replica interleaves
+  chunked prefill with its running decode batch.  ``--machine`` drives a
+  deterministic virtual clock from the paper's hybrid-CPU model (per-phase
+  core dispatch); ``--machine wall`` uses real wall time.
+* ``--legacy-batch`` — the seed-era whole-batch path (one
+  ``RoutedServer.serve_batch`` round), kept for migration comparisons.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_config, reduced_config
+from repro.core.hybrid_sim import MACHINES
 from repro.models import init_params
-from repro.serving import RoutedServer, ServeEngine
+from repro.runtime import RatioStore, RatioTable
+from repro.serving import (
+    DECODE,
+    PREFILL,
+    ContinuousBatchingEngine,
+    HybridPhaseCost,
+    InflightDispatcher,
+    LatencyReport,
+    RoutedServer,
+    ServeEngine,
+    poisson_requests,
+)
+
+
+def replica_slot_counts(batch: int, replicas: int) -> list:
+    """Split a total concurrent-request budget across replicas: ``per``
+    slots each plus the remainder spread over the first replicas (every
+    replica gets at least one slot)."""
+    if replicas < 1:
+        raise ValueError("need at least one replica")
+    base, rem = divmod(batch, replicas)
+    return [max(1, base + (1 if i < rem else 0)) for i in range(replicas)]
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-8b")
     ap.add_argument("--preset", choices=["tiny", "full"], default="tiny")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="total concurrent-request slots across replicas")
     ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=32,
+                    help="max new tokens per request")
     ap.add_argument("--replicas", type=int, default=1)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="open-loop Poisson arrival rate, req/s (0: all at t=0)")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="prompt tokens prefilled per iteration (0: one-shot)")
+    ap.add_argument("--machine", default="ultra-125h",
+                    choices=sorted(MACHINES) + ["wall"],
+                    help="virtual hybrid-CPU clock, or 'wall' for real time")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ratios", default=None,
+                    help="JSON path to warm-start/persist replica ratios")
+    ap.add_argument("--legacy-batch", action="store_true",
+                    help="run the seed-era whole-batch serve_batch path")
     args = ap.parse_args()
 
     cfg = get_config(args.arch) if args.preset == "full" else reduced_config(args.arch)
@@ -34,27 +79,72 @@ def main() -> int:
         raise SystemExit("use examples/ for stub-frontend archs")
     params = init_params(cfg, jax.random.key(0))
     max_seq = args.prompt_len + args.steps + 8
-    rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab_size,
-                           size=(args.batch, args.prompt_len), dtype=np.int32)
+    slot_counts = replica_slot_counts(args.batch, args.replicas)
 
-    if args.replicas > 1:
-        per = max(1, args.batch // args.replicas)
-        engines = [ServeEngine(cfg, params, batch_size=args.batch, max_seq=max_seq)
-                   for _ in range(args.replicas)]
+    if args.legacy_batch:
+        rng = np.random.default_rng(args.seed)
+        prompts = rng.integers(0, cfg.vocab_size,
+                               size=(args.batch, args.prompt_len),
+                               dtype=np.int32)
+        engines = [ServeEngine(cfg, params, batch_size=n, max_seq=max_seq)
+                   for n in slot_counts]
         srv = RoutedServer(engines)
-        t0 = time.time()
         out, counts, times = srv.serve_batch(prompts, args.steps)
-        print(f"[serve] routed counts={counts.tolist()} times={times.round(3).tolist()}")
-        print(f"[serve] {out.shape[0] * args.steps / (time.time() - t0):.1f} tok/s")
+        print(f"[serve] legacy routed counts={counts.tolist()} "
+              f"times={times.round(3).tolist()}")
+        print(f"[serve] generated shape={out.shape}")
         return 0
 
-    eng = ServeEngine(cfg, params, batch_size=args.batch, max_seq=max_seq)
-    r = eng.generate(jax.numpy.asarray(prompts), args.steps)
-    print(f"[serve] prefill={r.prefill_seconds * 1e3:.1f} ms "
-          f"decode={r.decode_seconds * 1e3:.1f} ms "
-          f"({r.tokens_per_second:.1f} tok/s)")
-    print("[serve] sample:", r.tokens[0, -min(16, args.steps):].tolist())
+    chunk = args.prefill_chunk if args.prefill_chunk > 0 else None
+    engines = []
+    for i, n_slots in enumerate(slot_counts):
+        cost = (None if args.machine == "wall"
+                else HybridPhaseCost(args.machine, seed=args.seed + i))
+        engines.append(ContinuousBatchingEngine(
+            cfg, params, max_slots=n_slots, max_seq=max_seq,
+            prefill_chunk=chunk, cost_model=cost))
+
+    table = RatioTable(args.replicas, alpha=0.3)
+    store = RatioStore(args.ratios) if args.ratios else None
+    if store is not None and store.load_into(table):
+        print(f"[serve] warm-started replica ratios from {args.ratios}")
+    disp = InflightDispatcher(engines, table=table)
+
+    requests = poisson_requests(
+        args.requests, rate=args.rate, vocab_size=cfg.vocab_size,
+        prompt_len=args.prompt_len, max_new_tokens=args.steps,
+        seed=args.seed)
+    routed = np.zeros(args.replicas, dtype=np.int64)
+    for r in requests:
+        # Let in-flight work progress up to this arrival so per-phase
+        # throughput feedback from earlier requests steers the routing of
+        # later ones (open loop: arrivals never wait on service).
+        while disp.has_work and disp.now < r.arrival_time:
+            disp.step()
+        i, _ = disp.submit(r)
+        routed[i] += 1
+    disp.run_until_idle()
+
+    report = LatencyReport.from_requests(requests)
+    clock = "virtual" if args.machine != "wall" else "wall"
+    print(f"[serve] {args.replicas} replica(s), slots={slot_counts}, "
+          f"routed={routed.tolist()} ({clock} clock)")
+    for line in report.lines():
+        print(line)
+    print(f"[serve] replica prefill ratios: "
+          f"{np.round(disp.table.ratios(PREFILL), 3).tolist()}")
+    print(f"[serve] replica decode  ratios: "
+          f"{np.round(disp.table.ratios(DECODE), 3).tolist()}")
+    if args.machine != "wall":
+        core = engines[0].cost_model.table
+        print(f"[serve] core ratio spread (replica 0): "
+              f"prefill={core.ratios(PREFILL).max() / core.ratios(PREFILL).min():.2f}x "
+              f"decode={core.ratios(DECODE).max() / core.ratios(DECODE).min():.2f}x")
+    sample = requests[0].tokens
+    print("[serve] sample:", sample[-min(16, args.steps):].tolist())
+    if store is not None:
+        store.save(table)
+        print(f"[serve] saved replica ratios to {args.ratios}")
     return 0
 
 

@@ -5,6 +5,7 @@ from .transformer import (
     abstract_params,
     init_state,
     abstract_state,
+    init_slot_state,
     forward,
     loss_fn,
     ForwardOut,
@@ -15,6 +16,7 @@ __all__ = [
     "abstract_params",
     "init_state",
     "abstract_state",
+    "init_slot_state",
     "forward",
     "loss_fn",
     "ForwardOut",

@@ -22,7 +22,9 @@ NEG_INF = -1e30
 class KVCache(NamedTuple):
     k: jax.Array    # (B, Hkv, S_max, hd)
     v: jax.Array    # (B, Hkv, S_max, hd)
-    idx: jax.Array  # () int32 — number of valid positions
+    idx: jax.Array  # () int32 — number of valid positions; or (B,) int32
+                    # for slot-batched serving where every row advances
+                    # independently (continuous batching)
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int, n_layers: int) -> list:
@@ -70,13 +72,17 @@ def _sdpa_grouped(q, k, v, q_pos, kv_pos, kv_len) -> jax.Array:
 
     q: (B, Hkv, G, Sq, hd);  k, v: (B, Hkv, Skv, hd)
     q_pos: (B, Sq) global query positions; kv_pos: (Skv,);
-    kv_len: () number of valid kv entries (cache may be partially filled).
+    kv_len: () number of valid kv entries (cache may be partially filled),
+    or (B,) when each row's cache fill differs (slot-batched decode).
     """
     scale = q.shape[-1] ** -0.5
     scores = jnp.einsum(
         "bhgqd,bhsd->bhgqs", q.astype(jnp.float32), k.astype(jnp.float32)
     ) * scale
-    allowed = (kv_pos[None, :] <= q_pos[..., None]) & (kv_pos[None, :] < kv_len)
+    kv_len = jnp.asarray(kv_len)
+    if kv_len.ndim == 1:
+        kv_len = kv_len[:, None, None]  # (B, 1, 1) against (B, Sq, Skv)
+    allowed = (kv_pos[None, :] <= q_pos[..., None]) & (kv_pos < kv_len)
     scores = jnp.where(allowed[:, None, None, :, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgqs,bhsd->bhgqd", probs, v.astype(jnp.float32))
@@ -113,10 +119,19 @@ def attn_fwd(
     k = apply_rope(k, positions, theta=cfg.rope_theta, fraction=cfg.rope_fraction)
 
     if cache is not None:
-        k_all = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
-                                             (0, 0, cache.idx, 0))
-        v_all = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
-                                             (0, 0, cache.idx, 0))
+        if cache.idx.ndim == 1:
+            # Slot-batched cache: every row appends at its own offset
+            # (continuous batching — rows are independent requests).
+            row_upd = jax.vmap(
+                lambda buf, new, at: jax.lax.dynamic_update_slice(
+                    buf, new, (0, at, 0)))
+            k_all = row_upd(cache.k, k.astype(cache.k.dtype), cache.idx)
+            v_all = row_upd(cache.v, v.astype(cache.v.dtype), cache.idx)
+        else:
+            k_all = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, 0, cache.idx, 0))
+            v_all = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, 0, cache.idx, 0))
         new_cache = KVCache(k=k_all, v=v_all, idx=cache.idx + s)
         kv_pos = jnp.arange(k_all.shape[2])
         kv_len = cache.idx + s

@@ -113,6 +113,25 @@ def abstract_state(cfg: ModelConfig, batch: int, max_seq: int):
     return jax.eval_shape(lambda: init_state(cfg, batch, max_seq))
 
 
+def init_slot_state(cfg: ModelConfig, n_slots: int, max_seq: int):
+    """Like :func:`init_state` but with per-row KV-cache indices: each of the
+    ``n_slots`` batch rows advances through its cache independently, which is
+    what a continuous-batching decode batch needs (rows are unrelated
+    requests at different positions)."""
+    state = init_state(cfg, n_slots, max_seq)
+
+    def widen(leaf):
+        if not isinstance(leaf, A.KVCache):
+            return leaf  # SSM/xLSTM states already carry a batch axis
+        # stacked over period repeats: k (n_rep, B, ...), idx (n_rep,)
+        return A.KVCache(
+            k=leaf.k, v=leaf.v,
+            idx=jnp.zeros((leaf.k.shape[0], n_slots), jnp.int32))
+
+    return jax.tree.map(widen, state,
+                        is_leaf=lambda x: isinstance(x, A.KVCache))
+
+
 # -------------------------------------------------------------- forward ---
 class ForwardOut(NamedTuple):
     logits: jax.Array
@@ -172,7 +191,11 @@ def forward(
     x = constrain(x, ("dp", None, None))
 
     b, s, _ = x.shape
-    positions = jnp.asarray(pos_offset) + jnp.arange(s)[None, :]
+    offset = jnp.asarray(pos_offset)
+    if offset.ndim == 1:  # per-row offsets (slot-batched serving)
+        positions = offset[:, None] + jnp.arange(s)[None, :]
+    else:
+        positions = offset + jnp.arange(s)[None, :]
     positions = jnp.broadcast_to(positions, (b, s))
 
     period = cfg.period()

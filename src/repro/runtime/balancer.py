@@ -50,14 +50,26 @@ class RegionStats:
         return self.key
 
     @property
+    def measured(self) -> np.ndarray:
+        """Workers that both received work and reported a time this round.
+        Zero-count workers never enter the timed region; their ``t == 0``
+        (or an injected phantom time) is *absence of measurement*, not a
+        measurement, and must not leak into telemetry or EMA updates."""
+        times = np.asarray(self.times, dtype=np.float64)
+        counts = np.asarray(self.counts)
+        return (counts > 0) & np.isfinite(times) & (times > 0)
+
+    @property
     def makespan(self) -> float:
-        return float(np.asarray(self.times).max(initial=0.0))
+        times = np.asarray(self.times, dtype=np.float64)
+        return float(times[self.measured].max(initial=0.0))
 
     @property
     def imbalance(self) -> float:
-        """max(t)/mean(t>0) — 1.0 is perfectly balanced."""
+        """max(t)/mean(t) over measured workers — 1.0 is perfectly
+        balanced."""
         times = np.asarray(self.times, dtype=np.float64)
-        active = times[times > 0]
+        active = times[self.measured]
         if active.size == 0:
             return 1.0
         return float(active.max() / active.mean())

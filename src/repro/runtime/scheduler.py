@@ -51,13 +51,11 @@ class CPURuntime(RatioTable):
 def run_plan(pool, plan: Plan, fn: Optional[Callable[[int, int], None]],
              work_per_unit: float = 1.0) -> np.ndarray:
     """Execute one planned region on a worker pool; per-worker times."""
-    subtasks, cursor = [], 0
-    for w, c in enumerate(plan.counts):
-        subtasks.append(
-            SubTask(worker=w, start=cursor, size=int(c),
-                    work=float(c) * work_per_unit, fn=fn)
-        )
-        cursor += int(c)
+    subtasks = [
+        SubTask(worker=w, start=lo, size=hi - lo,
+                work=float(hi - lo) * work_per_unit, fn=fn)
+        for w, (lo, hi) in enumerate(plan.ranges)
+    ]
     return pool.run(subtasks)
 
 

@@ -106,7 +106,11 @@ class RatioTable:
                 raise ValueError("units must have one entry per worker")
             valid = np.isfinite(times) & (times > 0) & (units > 0)
             observed = pr.copy()
-            if valid.any():
+            # like observed_ratios: a singleton measurement on a multi-
+            # worker table carries no relative information; carry over
+            # instead of normalizing it to 1.0 (which would EMA-erase
+            # learned heterogeneity whenever one worker runs alone)
+            if valid.sum() >= 2 or (valid.any() and self.n_workers == 1):
                 speed = np.zeros_like(pr)
                 speed[valid] = units[valid] / times[valid]
                 denom = speed[valid].sum()

@@ -1,5 +1,60 @@
-"""Serving substrate: batched engine + proportional replica routing."""
+"""Serving substrate: request-level continuous batching on the unified
+Balancer, with per-phase ("prefill"/"decode") ratio learning.
 
-from .engine import ServeEngine, RoutedServer, GenerationResult
+Layering::
 
-__all__ = ["ServeEngine", "RoutedServer", "GenerationResult"]
+    Request / RequestState / FinishReason      (request.py)
+        |
+    IterationScheduler  +  SlotCacheManager    (scheduler.py, slots.py)
+        |
+    ContinuousBatchingEngine                   (engine.py)
+        |
+    InflightDispatcher  --- per-phase RatioTable ---  HybridPhaseCost
+    (replica routing, dispatch.py)                    (core dispatch, phases.py)
+
+``ServeEngine`` / ``RoutedServer`` remain as the seed-era whole-batch API;
+``RoutedServer.serve_batch`` now executes through the new engine.
+"""
+
+from .engine import (
+    ContinuousBatchingEngine,
+    GenerationResult,
+    RoutedServer,
+    ServeEngine,
+)
+from .dispatch import InflightDispatcher
+from .phases import (
+    DECODE,
+    HybridPhaseCost,
+    LinearPhaseCost,
+    PhaseCostModel,
+    PREFILL,
+)
+from .metrics import LatencyReport, percentiles
+from .request import FinishReason, Request, RequestState
+from .scheduler import IterationScheduler, IterationStats, PrefillChunk
+from .slots import SlotCacheManager
+from .traffic import poisson_requests
+
+__all__ = [
+    "ServeEngine",
+    "RoutedServer",
+    "GenerationResult",
+    "ContinuousBatchingEngine",
+    "InflightDispatcher",
+    "Request",
+    "RequestState",
+    "FinishReason",
+    "IterationScheduler",
+    "IterationStats",
+    "PrefillChunk",
+    "SlotCacheManager",
+    "LatencyReport",
+    "percentiles",
+    "poisson_requests",
+    "PREFILL",
+    "DECODE",
+    "PhaseCostModel",
+    "HybridPhaseCost",
+    "LinearPhaseCost",
+]

@@ -1,14 +1,23 @@
-"""Batched serving engine: prefill + decode with KV/SSM state, plus the
-paper's dynamic replica routing.
+"""Serving engines: request-level continuous batching plus the legacy
+static-batch engine.
 
-``ServeEngine`` drives one model replica (jit'd prefill + decode-step).
-``RoutedServer`` composes several replicas behind the paper's Eq.-3 router
-(:class:`repro.runtime.ReplicaRouter` driven through a
-:class:`repro.runtime.Balancer`): each batch of requests is split across
-replicas proportionally to their measured decode throughput — the serving
-analogue of proportional core dispatch (useful when replicas live on
-heterogeneous pods or are co-tenanted).  Splits are clamped to per-replica
-batch capacity with the overflow redistributed to replicas with headroom.
+``ContinuousBatchingEngine`` is the serving core: a persistent decode
+batch of ``max_slots`` rows (slot-based KV/SSM state, per-row cache
+indices), an iteration-level scheduler that interleaves (optionally
+chunked) prefill with running decode steps, and request
+admission/eviction with no full-batch barrier.  Time comes either from
+wall-clock measurement or from a per-phase hybrid-CPU cost model
+(:class:`~repro.serving.phases.HybridPhaseCost`), which also drives the
+paper's control loop with separate "prefill" / "decode" ratio keys.
+
+``ServeEngine`` (static shapes, whole-batch generate) remains for
+benchmarks and as the building block the compatibility layer is
+constructed from.  ``RoutedServer.serve_batch`` is now a thin wrapper
+over per-replica continuous-batching engines: it keeps the seed-era
+signature (proportional split, capacity clamp, ``times_override``) while
+executing through the new request path.  New callers should use
+:class:`~repro.serving.dispatch.InflightDispatcher` instead, which routes
+individual requests by measured per-phase replica throughput.
 """
 
 from __future__ import annotations
@@ -16,7 +25,7 @@ from __future__ import annotations
 import functools
 import time
 from dataclasses import dataclass
-from typing import Callable, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -33,17 +42,23 @@ from repro.runtime import (
     clamp_to_capacity,
 )
 
+from .request import FinishReason, Request, RequestState
+from .scheduler import IterationScheduler, IterationStats
+from .slots import SlotCacheManager
+
 
 @dataclass
 class GenerationResult:
-    tokens: np.ndarray        # (B, prompt+new)
+    tokens: np.ndarray        # (B, prompt+new) — B may include padding rows
     prefill_seconds: float
     decode_seconds: float
     steps: int
+    n_requests: Optional[int] = None   # real (unpadded) request count
 
     @property
     def tokens_per_second(self) -> float:
-        new = self.tokens.shape[0] * self.steps
+        b = self.n_requests if self.n_requests is not None else self.tokens.shape[0]
+        new = b * self.steps
         return new / max(self.decode_seconds, 1e-9)
 
 
@@ -77,8 +92,10 @@ class ServeEngine:
         return init_state(self.cfg, self.batch_size, self.max_seq)
 
     def generate(self, prompts: jax.Array, n_steps: int,
-                 sampler: Optional[Callable] = None) -> GenerationResult:
-        """prompts: (B, S0) int32.  Greedy unless ``sampler(logits)->tok``."""
+                 sampler: Optional[Callable] = None,
+                 n_requests: Optional[int] = None) -> GenerationResult:
+        """prompts: (B, S0) int32.  Greedy unless ``sampler(logits)->tok``.
+        ``n_requests`` is the real request count when rows are padding."""
         b, s0 = prompts.shape
         assert b == self.batch_size
         state = self.fresh_state()
@@ -104,12 +121,261 @@ class ServeEngine:
             prefill_seconds=t_prefill,
             decode_seconds=t_decode,
             steps=n_steps,
+            n_requests=n_requests,
         )
 
 
+class ContinuousBatchingEngine:
+    """Request-level engine: persistent decode batch + interleaved prefill.
+
+    One :meth:`step` is one scheduler iteration:
+
+    1. *(idle fast-forward)* with nothing admitted and nothing running, the
+       clock jumps to the next arrival (open-loop traffic replay).
+    2. *Prefill lane*: at most one prompt chunk (``prefill_chunk`` tokens,
+       or the whole prompt) runs on a detached batch-1 state; on the last
+       chunk the first token is sampled and the state is adopted into a
+       free decode slot.
+    3. *Decode lane*: one greedy step for the whole persistent batch;
+       finished requests release their slots immediately (reused by the
+       next admission — no barrier, late requests join mid-flight).
+
+    ``cost_model`` (see :class:`~repro.serving.phases.PhaseCostModel`)
+    replaces wall timing with deterministic virtual seconds; the jitted
+    model still produces the real tokens.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, max_slots: int,
+                 max_seq: int, prefill_chunk: Optional[int] = None,
+                 sampler: Optional[Callable] = None, cost_model=None,
+                 donate_state: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.cost_model = cost_model
+        self.manager = SlotCacheManager(cfg, max_slots, max_seq)
+        self.scheduler = IterationScheduler(prefill_chunk)
+        self.now = 0.0
+        self.finished: List[Request] = []
+        self._running: List[Request] = []
+        # One prefill lane -> one partial state.  The fresh template is
+        # allocated once and reused for every admission (_prefill never
+        # donates its state argument, so the template stays intact).
+        self._fresh_prefill_state = init_state(cfg, 1, max_seq)
+        self._partial = None           # in-flight batch-1 prefill state
+        self._next_id = 0
+        # (B,) greedy rows by default; a sampler sees (B, V) logits.
+        self._pick = sampler or (lambda lg: jnp.argmax(lg, -1))
+
+        @jax.jit
+        def _prefill(params, tokens, state, offset):
+            out = forward(cfg, params, tokens, state=state, pos_offset=offset,
+                          logits_mode="last")
+            return out.logits[:, -1, :], out.state
+
+        donate = (2,) if donate_state else ()
+
+        @functools.partial(jax.jit, donate_argnums=donate)
+        def _decode(params, tok, state, pos):
+            out = forward(cfg, params, tok, state=state, pos_offset=pos)
+            return out.logits[:, -1, :], out.state
+
+        self._prefill = _prefill
+        self._decode = _decode
+
+    # ------------------------------------------------------------- intake --
+    def submit(self, request: Request) -> int:
+        """Queue a request; returns its engine-assigned id."""
+        if request.prompt_len + 1 > self.max_seq:
+            raise ValueError(
+                f"prompt of {request.prompt_len} tokens cannot decode within "
+                f"max_seq={self.max_seq}")
+        request.request_id = self._next_id
+        self._next_id += 1
+        self.scheduler.submit(request)
+        return request.request_id
+
+    @property
+    def has_work(self) -> bool:
+        return self.scheduler.has_work or bool(self._running)
+
+    @property
+    def n_running(self) -> int:
+        return len(self._running)
+
+    @property
+    def n_waiting(self) -> int:
+        return self.scheduler.n_waiting()
+
+    @property
+    def n_prefilling(self) -> int:
+        return int(self.scheduler.prefilling is not None)
+
+    @property
+    def pending_prefill_tokens(self) -> int:
+        """Prompt tokens queued ahead of a newly routed request (the
+        dispatcher's prefill-pressure signal)."""
+        pending = sum(r.prompt_len for r in self.scheduler.waiting)
+        if self.scheduler.prefilling is not None:
+            req = self.scheduler.prefilling
+            pending += req.prompt_len - req.prefill_done
+        return pending
+
+    def poll_finished(self) -> List[Request]:
+        """Drain and return requests finished since the last poll."""
+        out, self.finished = self.finished, []
+        return out
+
+    def abort(self, request: Request) -> bool:
+        """Cancel a request at any pre-finish stage (queue, prefill lane,
+        or decode batch), releasing whatever it holds.  Returns False when
+        it already finished."""
+        if request.state is RequestState.FINISHED:
+            return False
+        man, sched = self.manager, self.scheduler
+        if request.state is RequestState.WAITING:
+            try:
+                sched.waiting.remove(request)
+            except ValueError:
+                raise ValueError("request is not queued in this engine")
+        elif request.state is RequestState.PREFILL:
+            if sched.prefilling is not request:
+                raise ValueError("request is not prefilling in this engine")
+            sched.prefilling = None
+            self._partial = None
+            man.release(request.slot)
+            request.slot = None
+        elif request.state is RequestState.RUNNING:
+            if request not in self._running:
+                raise ValueError("request is not running in this engine")
+            self._running.remove(request)
+            man.release(request.slot)
+            request.slot = None
+        request.state = RequestState.FINISHED
+        request.finish_reason = FinishReason.ABORTED
+        request.finish_time = self.now
+        self.finished.append(request)
+        return True
+
+    # -------------------------------------------------------------- step ---
+    def step(self) -> IterationStats:
+        """Run one scheduler iteration; returns what it did (the per-phase
+        feedback record)."""
+        st = IterationStats()
+        man, sched = self.manager, self.scheduler
+
+        # Idle fast-forward: nothing to run until the next arrival.
+        if (not self._running and sched.prefilling is None
+                and sched.waiting and not sched.n_waiting(self.now)):
+            self.now = max(self.now, sched.waiting[0].arrival_time)
+
+        chunk = sched.next_prefill(self.now, man.n_free > 0)
+        if chunk is not None:
+            req = chunk.request
+            if req.slot is None:  # newly admitted: reserve the slot now
+                req.slot = man.allocate()
+                req.state = RequestState.PREFILL
+                req.admit_time = self.now
+                self._partial = self._fresh_prefill_state
+            tokens = jnp.asarray(
+                req.prompt[chunk.start:chunk.start + chunk.length][None, :])
+            t0 = time.perf_counter()
+            logits, small = self._prefill(
+                self.params, tokens, self._partial,
+                jnp.asarray(chunk.start, jnp.int32))
+            if self.cost_model is None:
+                logits.block_until_ready()
+                dt = time.perf_counter() - t0
+            else:
+                dt = self.cost_model.prefill_seconds(
+                    chunk.length, ctx=chunk.start + chunk.length)
+            req.prefill_done += chunk.length
+            sched.prefill_advanced(chunk)
+            self.now += dt
+            st.prefill_tokens = chunk.length
+            st.prefill_seconds = dt
+            if chunk.is_last:
+                self._partial = None
+                tok = int(np.asarray(self._pick(logits)).reshape(-1)[0])
+                req.generated.append(tok)
+                req.first_token_time = self.now
+                man.adopt(req.slot, small, req.prompt_len, tok)
+                req.state = RequestState.RUNNING
+                self._running.append(req)
+                st.admitted.append(req.request_id)
+                self._maybe_finish(req, tok, st)
+            else:
+                self._partial = small
+
+        if self._running:
+            tok = jnp.asarray(man.last_token[:, None])
+            pos = jnp.asarray(man.pos)
+            t0 = time.perf_counter()
+            logits, man.state = self._decode(self.params, tok, man.state, pos)
+            next_tok = np.asarray(self._pick(logits)).reshape(-1)
+            if self.cost_model is None:
+                dt = time.perf_counter() - t0
+            else:
+                dt = self.cost_model.decode_seconds(
+                    len(self._running), ctx=int(man.pos.max()))
+            self.now += dt
+            st.decode_tokens = len(self._running)
+            st.decode_seconds = dt
+            for req in list(self._running):
+                t = int(next_tok[req.slot])
+                req.generated.append(t)
+                man.last_token[req.slot] = t
+                man.pos[req.slot] += 1
+                self._maybe_finish(req, t, st)
+
+        st.n_running = len(self._running)
+        st.n_waiting = self.scheduler.n_waiting()
+        st.now = self.now
+        return st
+
+    def _maybe_finish(self, req: Request, tok: int, st: IterationStats) -> None:
+        stopped = req.stop_token is not None and tok == req.stop_token
+        out_of_room = req.prompt_len + req.n_generated + 1 > self.max_seq
+        if not (stopped or out_of_room
+                or req.n_generated >= req.max_new_tokens):
+            return
+        req.finish_reason = (FinishReason.STOP if stopped
+                             else FinishReason.LENGTH)
+        req.finish_time = self.now
+        req.state = RequestState.FINISHED
+        self.manager.release(req.slot)
+        req.slot = None
+        self._running.remove(req)
+        self.finished.append(req)
+        st.finished.append(req.request_id)
+
+    def run_until_idle(self, max_steps: Optional[int] = None) -> List[IterationStats]:
+        """Step until every submitted request has finished."""
+        stats = []
+        while self.has_work:
+            if max_steps is not None and len(stats) >= max_steps:
+                break
+            stats.append(self.step())
+        return stats
+
+
 class RoutedServer:
-    """Paper Eq. 3 at the serving layer: proportional request routing
-    across replicas with measured-throughput feedback."""
+    """Seed-era batch API (paper Eq. 3 at the serving layer), now a thin
+    compatibility wrapper over per-replica continuous-batching engines.
+
+    The whole-batch contract is preserved — proportional split across
+    replicas by the "serve_step" ratio entry, capacity clamp with overflow
+    redistribution, per-replica measured (or injected) times fed back —
+    but each replica's share executes through a
+    :class:`ContinuousBatchingEngine` rather than a padded static batch.
+    Note the engine admits through a single prefill lane, so a replica's
+    ``c`` prompts prefill as ``c`` batch-1 calls instead of the seed's one
+    batched call; on real hardware callers that want maximal prefill
+    batching for a fixed, fully-arrived batch should keep using
+    :meth:`ServeEngine.generate`.  Request-level callers should use
+    :class:`~repro.serving.dispatch.InflightDispatcher` directly.
+    """
 
     def __init__(self, engines: Sequence[ServeEngine],
                  sink: Optional[StatsSink] = None):
@@ -119,6 +385,20 @@ class RoutedServer:
         # keep_stats=False: a serving process is long-lived; per-batch
         # telemetry goes to the sink, not an unbounded list.
         self.balancer = Balancer(self.router, sink=sink, keep_stats=False)
+        self._cb_engines = None
+
+    @property
+    def _cb(self):
+        """Per-replica continuous-batching engines, built on first use so a
+        router-only RoutedServer does not allocate slot state up front."""
+        if self._cb_engines is None:
+            self._cb_engines = [
+                ContinuousBatchingEngine(e.cfg, e.params,
+                                         max_slots=e.batch_size,
+                                         max_seq=e.max_seq)
+                for e in self.engines
+            ]
+        return self._cb_engines
 
     @property
     def capacities(self) -> np.ndarray:
@@ -134,23 +414,48 @@ class RoutedServer:
                              dtype=prompts.dtype),
                     np.zeros(len(self.engines), dtype=np.int64),
                     np.zeros(len(self.engines)))
-        # The proportional split can exceed a fast replica's static batch
-        # size; clamp to capacity and hand the overflow to other replicas.
+        if n_steps == 0:
+            # Seed contract: a 0-step round returns the prompts unchanged.
+            # Nothing is decoded, so nothing is measured or fed back.
+            counts = clamp_to_capacity(self.balancer.plan(len(prompts)).counts,
+                                       self.capacities)
+            return (np.array(prompts, copy=True), counts,
+                    np.zeros(len(self.engines)))
+        # The (B, s0 + n_steps) output contract needs cache room for every
+        # step on whichever replica a request lands on; fail loudly up
+        # front rather than silently returning a narrower array.
+        s0 = prompts.shape[1]
+        short = min(e.max_seq for e in self.engines)
+        if s0 + n_steps > short:
+            raise ValueError(
+                f"prompt_len {s0} + n_steps {n_steps} exceeds replica "
+                f"max_seq {short}; build engines with max_seq >= "
+                f"prompt_len + n_steps")
+        # The proportional split can exceed a fast replica's slot count;
+        # clamp to capacity and hand the overflow to other replicas.
         planned = self.balancer.plan(len(prompts))
         counts = clamp_to_capacity(planned.counts, self.capacities)
         plan = Plan(counts=counts, key=planned.key)
         with self.balancer.balanced_region(plan=plan) as region:
             results, start = [], 0
-            for i, (eng, c) in enumerate(zip(self.engines, counts)):
+            for i, (cb, c) in enumerate(zip(self._cb, counts)):
                 if c == 0:
                     continue
                 chunk = prompts[start:start + c]
                 start += c
-                pad = eng.batch_size - len(chunk)
-                padded = np.pad(chunk, ((0, pad), (0, 0))) if pad else chunk
+                reqs = [Request(prompt=p, max_new_tokens=n_steps)
+                        for p in chunk]
                 with region.timed(i):
-                    r = eng.generate(jnp.asarray(padded), n_steps)
-                results.append(r.tokens[: len(chunk)])
+                    for r in reqs:
+                        r.arrival_time = cb.now
+                        cb.submit(r)
+                    cb.run_until_idle()
+                cb.poll_finished()  # keep the long-lived engine bounded
+                results.append(np.stack([r.tokens for r in reqs]))
             if times_override is not None:
-                region.times[:] = np.asarray(times_override, dtype=np.float64)
+                # Replicas that served nothing have no measurement this
+                # round; keep their time at 0 so EMA updates and telemetry
+                # skip them instead of learning from a phantom sample.
+                override = np.asarray(times_override, dtype=np.float64)
+                region.times[:] = np.where(counts > 0, override, 0.0)
         return np.concatenate(results, axis=0), counts, region.times

@@ -1,0 +1,95 @@
+"""Serving latency metrics: TTFT / TPOT percentiles and goodput.
+
+Shared by ``repro.launch.serve`` and ``benchmarks/bench_serving.py`` so
+the driver and the benchmark report identical numbers for identical
+traffic.  All times are engine-clock seconds (deterministic under a
+phase cost model).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from .request import FinishReason, Request
+
+__all__ = ["PERCENTILES", "percentiles", "LatencyReport"]
+
+PERCENTILES = (50, 90, 99)
+
+
+def percentiles(values: Sequence[float],
+                ps: Sequence[int] = PERCENTILES) -> Dict[int, float]:
+    """{p: value} with linear interpolation; empty input -> NaNs."""
+    if len(values) == 0:
+        return {p: float("nan") for p in ps}
+    arr = np.asarray(list(values), dtype=np.float64)
+    return {p: float(np.percentile(arr, p)) for p in ps}
+
+
+@dataclass
+class LatencyReport:
+    """Aggregate serving metrics over a set of finished requests."""
+
+    n_requests: int
+    n_finished: int
+    duration: float                  # engine-clock span of the run
+    generated_tokens: int
+    ttft: Dict[int, float]           # percentile -> seconds
+    tpot: Dict[int, float]
+    goodput: float                   # SLO-meeting finished requests / second
+
+    @classmethod
+    def from_requests(cls, requests: Sequence[Request], *,
+                      duration: Optional[float] = None,
+                      slo_ttft: Optional[float] = None,
+                      slo_tpot: Optional[float] = None) -> "LatencyReport":
+        done = [r for r in requests if r.finish_time is not None]
+        # aborted requests count as finished but never as served or as
+        # goodput: cancelling stragglers must not flatter the percentiles
+        served = [r for r in done
+                  if r.finish_reason is not FinishReason.ABORTED
+                  and r.ttft is not None]
+        if duration is None:
+            t0 = min((r.arrival_time for r in requests), default=0.0)
+            t1 = max((r.finish_time for r in done), default=0.0)
+            duration = max(t1 - t0, 0.0)
+        # single-token completions carry a TTFT sample but no TPOT sample
+        # (tpot is None); they cannot violate a TPOT SLO
+        good = [
+            r for r in served
+            if (slo_ttft is None or r.ttft <= slo_ttft)
+            and (slo_tpot is None or r.tpot is None or r.tpot <= slo_tpot)
+        ]
+        return cls(
+            n_requests=len(requests),
+            n_finished=len(done),
+            duration=duration,
+            # served only: tokens of cancelled stragglers must not inflate
+            # the reported throughput of completed work
+            generated_tokens=sum(r.n_generated for r in served),
+            ttft=percentiles([r.ttft for r in served]),
+            tpot=percentiles([r.tpot for r in served
+                              if r.tpot is not None]),
+            goodput=len(good) / duration if duration > 0 else 0.0,
+        )
+
+    @property
+    def throughput(self) -> float:
+        """Generated tokens per engine-clock second."""
+        if self.duration <= 0:
+            return 0.0
+        return self.generated_tokens / self.duration
+
+    def lines(self, prefix: str = "[serve]") -> list:
+        fmt = lambda d: " ".join(
+            f"p{p}={v * 1e3:.2f}ms" for p, v in sorted(d.items()))
+        return [
+            f"{prefix} finished {self.n_finished}/{self.n_requests} requests, "
+            f"{self.generated_tokens} tokens in {self.duration:.3f}s "
+            f"({self.throughput:.1f} tok/s, goodput {self.goodput:.2f} req/s)",
+            f"{prefix} ttft {fmt(self.ttft)}",
+            f"{prefix} tpot {fmt(self.tpot)}",
+        ]

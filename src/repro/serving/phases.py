@@ -1,0 +1,149 @@
+"""Execution phases and the per-phase hybrid-CPU cost model.
+
+The paper's Fig. 4 observation: balance ratios are *phase dependent* —
+prefill is compute-bound (``avx_vnni``; P/E core ratios stay wide, ~2-3x)
+while decode is memory-bound (``membw``; shared bandwidth compresses
+ratios toward 1).  A single blended ratio table therefore misplans one of
+the two phases.  Everything serving-side keys its
+:class:`~repro.runtime.RatioTable` entries by phase — :data:`PREFILL` /
+:data:`DECODE` — at both levels:
+
+* core dispatch (:class:`HybridPhaseCost`): each serving iteration's
+  prefill chunk and decode step are split across the simulated cores by a
+  per-phase :class:`~repro.runtime.Balancer`, so the table converges to
+  distinct "prefill" and "decode" entries;
+* replica routing (:class:`~repro.serving.dispatch.InflightDispatcher`):
+  per-replica tokens/s are learned separately per phase.
+
+:class:`HybridPhaseCost` doubles as the engine's deterministic virtual
+clock: on this 1-core container the real jitted model supplies *tokens*
+while the simulated machine supplies *time*.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.hybrid_sim import SimulatedHybridCPU, make_machine
+from repro.core.pool import VirtualWorkerPool
+from repro.runtime import (
+    Balancer,
+    ProportionalPolicy,
+    RatioTable,
+    StatsSink,
+    run_plan,
+)
+
+__all__ = ["PREFILL", "DECODE", "PHASES", "PhaseCostModel",
+           "HybridPhaseCost", "LinearPhaseCost", "phase_balancers"]
+
+PREFILL = "prefill"
+DECODE = "decode"
+PHASES = (PREFILL, DECODE)
+
+
+def phase_balancers(table: RatioTable, sink: Optional[StatsSink] = None):
+    """One units-feedback Balancer per phase over a shared table — the
+    construction both levels of the control loop (core dispatch here,
+    replica dispatch in :mod:`repro.serving.dispatch`) run on."""
+    return {
+        phase: Balancer(
+            ProportionalPolicy(table, key=phase, feedback="units"),
+            sink=sink, keep_stats=False)
+        for phase in PHASES
+    }
+
+
+@runtime_checkable
+class PhaseCostModel(Protocol):
+    """Virtual-time source for one serving iteration's two phases."""
+
+    def prefill_seconds(self, n_tokens: int, ctx: int) -> float: ...
+
+    def decode_seconds(self, n_active: int, ctx: int) -> float: ...
+
+
+class HybridPhaseCost:
+    """Paper-faithful per-phase core dispatch on a simulated hybrid CPU.
+
+    Each phase call plans a proportional split of the phase's work across
+    the machine's cores (Eq. 3) under the phase's ratio-table key, runs it
+    on a :class:`VirtualWorkerPool` with the phase's primary ISA, feeds the
+    per-core times back (Eq. 2 + EMA), and returns the region makespan.
+
+    Work-volume defaults model a llama2-7B-class checkpoint (Q4 weights):
+    ``prefill_macs_per_token`` int8 MACs per prompt token and
+    ``decode_bytes_per_step`` streamed weight bytes per decode step, plus
+    ``kv_bytes_per_ctx_token`` per active request per context token.
+    """
+
+    def __init__(self, machine: SimulatedHybridCPU | str = "ultra-125h", *,
+                 table: Optional[RatioTable] = None, alpha: float = 0.3,
+                 seed: int = 0, sink: Optional[StatsSink] = None,
+                 prefill_macs_per_token: float = 14e9,
+                 decode_bytes_per_step: float = 3.9e9,
+                 kv_bytes_per_ctx_token: float = 1e6,
+                 decode_units: int = 4096):
+        if isinstance(machine, str):
+            machine = make_machine(machine, seed=seed)
+        self.machine = machine
+        self.table = table or RatioTable(machine.n_cores, alpha=alpha)
+        if self.table.n_workers != machine.n_cores:
+            raise ValueError("table size does not match machine core count")
+        self.prefill_macs_per_token = prefill_macs_per_token
+        self.decode_bytes_per_step = decode_bytes_per_step
+        self.kv_bytes_per_ctx_token = kv_bytes_per_ctx_token
+        self.decode_units = decode_units
+        self._pools = {PREFILL: VirtualWorkerPool(machine, isa="avx_vnni"),
+                       DECODE: VirtualWorkerPool(machine, isa="membw")}
+        self._balancers = phase_balancers(self.table, sink)
+
+    def ratios(self, phase: str) -> np.ndarray:
+        return self.table.ratios(phase)
+
+    def _region(self, phase: str, n_units: int, work_per_unit: float) -> float:
+        bal = self._balancers[phase]
+        plan = bal.plan(n_units)
+        times = run_plan(self._pools[phase], plan, None, work_per_unit)
+        bal.report(plan, times)
+        return float(times.max(initial=0.0))
+
+    def prefill_seconds(self, n_tokens: int, ctx: int) -> float:
+        """Compute-bound chunk: split the token dimension across cores."""
+        if n_tokens <= 0:
+            return 0.0
+        return self._region(PREFILL, int(n_tokens), self.prefill_macs_per_token)
+
+    def decode_seconds(self, n_active: int, ctx: int) -> float:
+        """Memory-bound step: weights stream once for the whole batch, KV
+        reads scale with active requests x context; the split dimension is
+        abstract weight-row tiles."""
+        if n_active <= 0:
+            return 0.0
+        total_bytes = (self.decode_bytes_per_step
+                       + n_active * max(ctx, 0) * self.kv_bytes_per_ctx_token)
+        return self._region(DECODE, self.decode_units,
+                            total_bytes / self.decode_units)
+
+
+class LinearPhaseCost:
+    """Trivial deterministic cost model (tests / heterogeneous-replica
+    studies): prefill costs ``prefill_per_token`` per prompt token, decode
+    ``decode_per_step`` per iteration plus ``decode_per_active`` per row."""
+
+    def __init__(self, prefill_per_token: float = 1e-3,
+                 decode_per_step: float = 1e-3,
+                 decode_per_active: float = 0.0):
+        self.prefill_per_token = prefill_per_token
+        self.decode_per_step = decode_per_step
+        self.decode_per_active = decode_per_active
+
+    def prefill_seconds(self, n_tokens: int, ctx: int) -> float:
+        return 0.0 if n_tokens <= 0 else self.prefill_per_token * n_tokens
+
+    def decode_seconds(self, n_active: int, ctx: int) -> float:
+        if n_active <= 0:
+            return 0.0
+        return self.decode_per_step + self.decode_per_active * n_active

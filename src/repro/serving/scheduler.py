@@ -1,0 +1,126 @@
+"""Iteration-level scheduling for the continuous-batching engine.
+
+One engine iteration = (at most one prefill chunk) + (one decode step for
+the whole persistent batch).  The scheduler decides *which* prompt tokens
+run in the prefill lane each iteration:
+
+* Admission is arrival-ordered FIFO (deterministic): a waiting request is
+  admitted as soon as it has arrived (``arrival_time <= now``) and a slot
+  is free.
+* Prefill is optionally *chunked* (``prefill_chunk``): long prompts are
+  consumed up to ``chunk`` tokens per iteration so running decodes are
+  never starved behind a long prompt — the usual continuous-batching
+  trade between TTFT of the new request and TPOT of the running ones.
+  Chunk lengths are bucketed to powers of two so the engine's jitted
+  prefill compiles at most ``log2(prefill_chunk) + 1`` shapes, no matter
+  how prompt lengths vary (decode already has one static shape).
+
+The scheduler is pure host-side bookkeeping; the engine owns all jitted
+execution and the slot state.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional
+
+from .request import Request, RequestState
+
+__all__ = ["PrefillChunk", "IterationStats", "IterationScheduler"]
+
+
+@dataclass(frozen=True)
+class PrefillChunk:
+    """One iteration's prefill work: ``request.prompt[start:start+length]``."""
+
+    request: Request
+    start: int
+    length: int
+
+    @property
+    def is_last(self) -> bool:
+        return self.start + self.length >= self.request.prompt_len
+
+
+@dataclass
+class IterationStats:
+    """What one engine iteration did, in engine-clock seconds — the per-phase
+    feedback consumed by the replica dispatcher's ratio tables."""
+
+    now: float = 0.0
+    prefill_tokens: int = 0
+    prefill_seconds: float = 0.0
+    decode_tokens: int = 0          # one per running slot stepped
+    decode_seconds: float = 0.0
+    n_running: int = 0
+    n_waiting: int = 0
+    admitted: List[int] = field(default_factory=list)    # request ids
+    finished: List[int] = field(default_factory=list)
+
+
+class IterationScheduler:
+    """Admission queue + chunked-prefill cursor.
+
+    At most one request is in the PREFILL state at a time; its prompt is
+    consumed chunk by chunk across iterations, interleaved with decode
+    steps of the running batch.
+    """
+
+    def __init__(self, prefill_chunk: Optional[int] = None):
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        self.prefill_chunk = prefill_chunk
+        self.waiting: Deque[Request] = deque()
+        self.prefilling: Optional[Request] = None
+
+    # ------------------------------------------------------------- intake --
+    def submit(self, request: Request) -> None:
+        """Queue a request, keeping the queue sorted by arrival time (stable
+        for equal arrivals, so submit order breaks ties deterministically)."""
+        if request.state is not RequestState.WAITING:
+            raise ValueError("only WAITING requests can be submitted")
+        if self.waiting and request.arrival_time < self.waiting[-1].arrival_time:
+            items = sorted(list(self.waiting) + [request],
+                           key=lambda r: r.arrival_time)
+            self.waiting = deque(items)
+        else:
+            self.waiting.append(request)
+
+    def n_waiting(self, now: Optional[float] = None) -> int:
+        if now is None:
+            return len(self.waiting)
+        return sum(1 for r in self.waiting if r.arrival_time <= now)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting) or self.prefilling is not None
+
+    # ----------------------------------------------------------- per-step --
+    def next_prefill(self, now: float, slot_available: bool) -> Optional[PrefillChunk]:
+        """The prefill work for this iteration, admitting a new request from
+        the queue when the lane is idle and a slot is free."""
+        if self.prefilling is None:
+            if (not slot_available or not self.waiting
+                    or self.waiting[0].arrival_time > now):
+                return None
+            self.prefilling = self.waiting.popleft()
+        req = self.prefilling
+        remaining = req.prompt_len - req.prefill_done
+        if self.prefill_chunk is None:
+            length = remaining
+        else:
+            # largest power of two <= min(chunk, remaining): a bounded
+            # shape set for the jitted prefill (one-shot mode instead
+            # compiles per distinct prompt length, the caller's trade)
+            length = min(self.prefill_chunk, remaining)
+            length = 1 << (length.bit_length() - 1)
+        return PrefillChunk(request=req, start=req.prefill_done, length=length)
+
+    def prefill_advanced(self, chunk: PrefillChunk) -> None:
+        """Mark ``chunk`` as executed; frees the prefill lane on the last
+        chunk (the engine flips the request to RUNNING)."""
+        if chunk.request is not self.prefilling:
+            raise ValueError("chunk does not belong to the active prefill")
+        if chunk.is_last:
+            self.prefilling = None

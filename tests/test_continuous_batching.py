@@ -1,0 +1,323 @@
+"""Continuous-batching engine: admission, slot reuse, chunked prefill,
+per-phase ratio learning, latency metrics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models import forward, init_params
+from repro.serving import (
+    DECODE,
+    PREFILL,
+    ContinuousBatchingEngine,
+    FinishReason,
+    HybridPhaseCost,
+    LatencyReport,
+    LinearPhaseCost,
+    Request,
+    RequestState,
+    poisson_requests,
+)
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab_size=128, dtype="float32")
+PARAMS = init_params(CFG, jax.random.key(0))
+
+CFG_HYBRID = ModelConfig(name="h", family="hybrid", n_layers=2, d_model=64,
+                         n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64,
+                         dtype="float32", mixer_pattern=("attn", "mamba"),
+                         ssm=SSMConfig())
+PARAMS_HYBRID = init_params(CFG_HYBRID, jax.random.key(1))
+
+
+def _engine(**kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_seq", 32)
+    kw.setdefault("cost_model", LinearPhaseCost())
+    return ContinuousBatchingEngine(CFG, PARAMS, **kw)
+
+
+def _requests(n, prompt_len=6, steps=4, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, CFG.vocab_size, size=prompt_len),
+                    max_new_tokens=steps, **kw) for _ in range(n)]
+
+
+# ---------------------------------------------------------- correctness ---
+def test_engine_greedy_matches_full_forward():
+    eng = _engine(max_slots=3)
+    reqs = _requests(4, steps=3)
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_idle(max_steps=100)
+    for r in reqs:
+        assert r.state is RequestState.FINISHED
+        toks = r.tokens
+        for k in range(r.prompt_len, len(toks)):
+            full = forward(CFG, PARAMS, jnp.asarray(toks[None, :k]))
+            expect = int(np.asarray(jnp.argmax(full.logits[0, -1], -1)))
+            assert toks[k] == expect
+
+
+def test_engine_hybrid_arch_with_slot_reuse():
+    """SSM states must survive adoption/eviction scatter, and a reused slot
+    must not leak its previous occupant's cache."""
+    eng = ContinuousBatchingEngine(CFG_HYBRID, PARAMS_HYBRID, max_slots=2,
+                                   max_seq=24, cost_model=LinearPhaseCost())
+    rng = np.random.default_rng(2)
+    reqs = [Request(prompt=rng.integers(0, 64, size=5), max_new_tokens=4)
+            for _ in range(4)]  # 4 requests through 2 slots -> reuse
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_idle(max_steps=200)
+    assert eng.manager.n_free == 2
+    for r in reqs:
+        toks = r.tokens
+        full = forward(CFG_HYBRID, PARAMS_HYBRID, jnp.asarray(toks[None, :-1]))
+        expect = int(np.asarray(jnp.argmax(full.logits[0, -1], -1)))
+        assert toks[-1] == expect
+
+
+def test_chunked_prefill_equivalent_to_one_shot():
+    prompt = np.arange(10, dtype=np.int32) % CFG.vocab_size
+    outs = []
+    for chunk in (None, 3):
+        eng = _engine(prefill_chunk=chunk)
+        req = Request(prompt=prompt, max_new_tokens=5)
+        eng.submit(req)
+        eng.run_until_idle(max_steps=100)
+        outs.append(req.tokens)
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+# ------------------------------------------------------------ scheduling ---
+def test_admission_in_arrival_order():
+    eng = _engine(max_slots=1)
+    late = _requests(1, seed=1, arrival_time=0.5)[0]
+    early = _requests(1, seed=2, arrival_time=0.0)[0]
+    eng.submit(late)   # submitted first, arrives later
+    eng.submit(early)
+    eng.run_until_idle(max_steps=200)
+    assert early.admit_time < late.admit_time
+    assert early.first_token_time < late.first_token_time
+
+
+def test_late_request_joins_inflight_batch():
+    """No barrier: a request arriving mid-decode of another is admitted
+    before the first finishes."""
+    eng = _engine(max_slots=2, cost_model=LinearPhaseCost(
+        prefill_per_token=1e-3, decode_per_step=1e-2))
+    long_req = _requests(1, steps=20)[0]
+    late = _requests(1, seed=3, steps=2, arrival_time=0.05)[0]
+    eng.submit(long_req)
+    eng.submit(late)
+    eng.run_until_idle(max_steps=300)
+    assert late.admit_time > long_req.first_token_time   # joined mid-flight
+    assert late.finish_time < long_req.finish_time       # and left first
+
+
+def test_chunked_prefill_lengths_are_power_of_two_buckets():
+    """Varying prompt lengths must not grow the jitted prefill shape set:
+    chunk lengths are power-of-two buckets <= prefill_chunk."""
+    eng = _engine(max_slots=1, prefill_chunk=8)
+    req = Request(prompt=np.arange(13, dtype=np.int32) % CFG.vocab_size,
+                  max_new_tokens=2)
+    eng.submit(req)
+    stats = eng.run_until_idle(max_steps=100)
+    lengths = [s.prefill_tokens for s in stats if s.prefill_tokens]
+    assert sum(lengths) == 13
+    assert lengths == [8, 4, 1]
+    assert all(l & (l - 1) == 0 for l in lengths)
+
+
+def test_abort_releases_resources_in_every_state():
+    eng = _engine(max_slots=1, prefill_chunk=4)
+    running, queued = _requests(2, prompt_len=6, steps=20)
+    eng.submit(running)
+    eng.submit(queued)
+    for _ in range(4):
+        eng.step()
+    assert running.state is RequestState.RUNNING
+    assert queued.state is RequestState.WAITING
+    assert eng.abort(queued) and queued.finish_reason is FinishReason.ABORTED
+    assert eng.abort(running) and running.slot is None
+    assert eng.manager.n_free == 1
+    assert not eng.has_work
+    assert eng.abort(running) is False  # already finished
+    # mid-prefill abort frees the lane and the reserved slot
+    pre = _requests(1, prompt_len=6, steps=2, seed=9)[0]
+    eng.submit(pre)
+    eng.step()
+    assert pre.state is RequestState.PREFILL
+    assert eng.abort(pre)
+    assert eng.manager.n_free == 1 and not eng.has_work
+    assert len(eng.poll_finished()) == 3
+
+
+def test_slot_reuse_and_bounded_concurrency():
+    eng = _engine(max_slots=2)
+    reqs = _requests(5)
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.run_until_idle(max_steps=300)
+    assert all(s.n_running <= 2 for s in stats)
+    assert all(r.state is RequestState.FINISHED for r in reqs)
+    assert eng.manager.n_free == 2
+    # slots were actually recycled: 5 requests cannot fit 2 slots at once
+    assert {r.slot for r in reqs} == {None}
+    assert len(eng.poll_finished()) == 5
+
+
+def test_idle_fast_forward_to_next_arrival():
+    eng = _engine()
+    req = _requests(1, arrival_time=1.25)[0]
+    eng.submit(req)
+    eng.run_until_idle(max_steps=100)
+    assert req.admit_time == pytest.approx(1.25)
+    assert req.ttft > 0
+
+
+# ------------------------------------------------------- finish semantics --
+def test_stop_token_and_length_reasons():
+    eng = _engine(max_slots=2)
+    r_len = _requests(1, steps=3)[0]
+    eng.submit(r_len)
+    eng.run_until_idle(max_steps=100)
+    assert r_len.finish_reason is FinishReason.LENGTH
+    assert r_len.n_generated == 3
+
+    # stop token: run once to learn the greedy continuation, then stop on it
+    probe = _requests(1, seed=7, steps=4)[0]
+    eng.submit(probe)
+    eng.run_until_idle(max_steps=100)
+    stop = int(probe.generated[1])
+    replay = Request(prompt=probe.prompt.copy(), max_new_tokens=4,
+                     stop_token=stop)
+    eng.submit(replay)
+    eng.run_until_idle(max_steps=100)
+    assert replay.finish_reason is FinishReason.STOP
+    assert replay.generated[-1] == stop
+    assert replay.n_generated == 2
+
+
+def test_finishes_at_max_seq_instead_of_overflowing():
+    eng = _engine(max_slots=1, max_seq=12)
+    req = Request(prompt=np.arange(8, dtype=np.int32), max_new_tokens=50)
+    eng.submit(req)
+    eng.run_until_idle(max_steps=100)
+    assert req.finish_reason is FinishReason.LENGTH
+    assert req.prompt_len + req.n_generated <= 12
+
+
+def test_rejects_prompt_beyond_max_seq():
+    eng = _engine(max_seq=8)
+    with pytest.raises(ValueError):
+        eng.submit(Request(prompt=np.arange(8, dtype=np.int32),
+                           max_new_tokens=1))
+
+
+# ------------------------------------------------- per-phase ratio tables --
+def test_per_phase_ratios_converge_distinctly_on_hybrid_sim():
+    """The acceptance property: under the virtual hybrid CPU, the ratio
+    table holds distinct converged "prefill" (wide, compute-bound) and
+    "decode" (compressed, bandwidth-bound) entries."""
+    cost = HybridPhaseCost("ultra-125h")
+    eng = ContinuousBatchingEngine(CFG, PARAMS, max_slots=4, max_seq=64,
+                                   prefill_chunk=16, cost_model=cost)
+    reqs = poisson_requests(10, rate=5.0, vocab_size=CFG.vocab_size,
+                            prompt_len=32, max_new_tokens=8, seed=0)
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_idle(max_steps=2000)
+    assert set(cost.table.keys()) >= {PREFILL, DECODE}
+    pf, dec = cost.ratios(PREFILL), cost.ratios(DECODE)
+    p_over_e_prefill = pf[:4].mean() / pf[4:12].mean()   # P cores / E cores
+    p_over_e_decode = dec[:4].mean() / dec[4:12].mean()
+    assert p_over_e_prefill > 1.8          # compute ratios stay wide
+    assert p_over_e_decode < 1.5           # bandwidth ratios compress to ~1
+    assert p_over_e_prefill > p_over_e_decode + 0.3
+
+
+# ---------------------------------------------------------------- metrics --
+def test_latency_report_and_traffic_determinism():
+    a = poisson_requests(6, rate=100.0, vocab_size=CFG.vocab_size,
+                         prompt_len=(4, 8), max_new_tokens=(2, 4), seed=5)
+    b = poisson_requests(6, rate=100.0, vocab_size=CFG.vocab_size,
+                         prompt_len=(4, 8), max_new_tokens=(2, 4), seed=5)
+    for x, y in zip(a, b):
+        assert x.arrival_time == y.arrival_time
+        np.testing.assert_array_equal(x.prompt, y.prompt)
+        assert x.max_new_tokens == y.max_new_tokens
+    assert a[0].arrival_time == 0.0
+
+    eng = _engine(max_slots=3, max_seq=16)
+    for r in a:
+        eng.submit(r)
+    eng.run_until_idle(max_steps=500)
+    rep = LatencyReport.from_requests(a, slo_ttft=1e9, slo_tpot=1e9)
+    assert rep.n_finished == 6
+    assert rep.ttft[50] <= rep.ttft[90] <= rep.ttft[99]
+    assert rep.goodput > 0
+    for r in a:
+        assert r.ttft is not None and r.ttft >= 0
+        assert r.tpot is not None and r.tpot >= 0
+    strict = LatencyReport.from_requests(a, slo_ttft=-1.0)
+    assert strict.goodput == 0.0
+
+
+def test_latency_report_tolerates_aborted_requests():
+    """A request aborted before its first token has no latency sample; it
+    counts as finished but must not crash or NaN the percentiles."""
+    eng = _engine(max_slots=1)
+    served, aborted = _requests(2, steps=2)
+    eng.submit(served)
+    eng.submit(aborted)
+    eng.step()                  # `served` occupies the only slot
+    assert eng.abort(aborted)   # still WAITING: no first token ever
+    eng.run_until_idle(max_steps=100)
+    rep = LatencyReport.from_requests([served, aborted],
+                                      slo_ttft=1e9, slo_tpot=1e9)
+    assert rep.n_finished == 2
+    assert np.isfinite(rep.ttft[50]) and np.isfinite(rep.tpot[50])
+    assert rep.goodput > 0
+
+    # aborting mid-decode must not flatter percentiles or goodput either
+    eng2 = _engine(max_slots=2)
+    fast = _requests(1, steps=2)[0]
+    straggler = _requests(1, steps=20, seed=11)[0]
+    eng2.submit(fast)
+    eng2.submit(straggler)
+    for _ in range(3):
+        eng2.step()
+    assert straggler.state is RequestState.RUNNING
+    eng2.abort(straggler)
+    eng2.run_until_idle(max_steps=100)
+    rep2 = LatencyReport.from_requests([fast, straggler],
+                                       slo_ttft=1e9, slo_tpot=1e9)
+    assert rep2.goodput * rep2.duration == pytest.approx(1.0)  # only `fast`
+
+
+def test_single_token_completion_has_no_tpot_sample():
+    """max_new_tokens=1 finishes at prefill: a TTFT sample exists but no
+    decode interval; it must not drag TPOT percentiles toward zero nor
+    fail TPOT SLOs."""
+    eng = _engine()
+    one = _requests(1, steps=1)[0]
+    two = _requests(1, steps=4, seed=13)[0]
+    eng.submit(one)
+    eng.submit(two)
+    eng.run_until_idle(max_steps=100)
+    assert one.finish_reason is FinishReason.LENGTH and one.n_generated == 1
+    assert one.tpot is None and one.ttft is not None
+    rep = LatencyReport.from_requests([one, two], slo_ttft=1e9, slo_tpot=1e-12)
+    assert rep.tpot[50] == pytest.approx(two.tpot)  # only `two` sampled
+    assert rep.goodput * rep.duration == pytest.approx(1.0)  # `one` passes SLO
+
+
+def test_poisson_requests_accepts_numpy_scalar_lengths():
+    reqs = poisson_requests(2, rate=0.0, vocab_size=32,
+                            prompt_len=np.int64(5),
+                            max_new_tokens=np.int32(3), seed=0)
+    assert all(r.prompt_len == 5 and r.max_new_tokens == 3 for r in reqs)

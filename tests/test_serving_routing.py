@@ -1,0 +1,240 @@
+"""Replica routing: per-phase dispatch, heterogeneous capacities,
+zero-count masking, and the serve_batch compatibility wrapper."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.launch.serve import replica_slot_counts
+from repro.models import init_params
+from repro.runtime import ListSink, RatioTable, RegionStats
+from repro.serving import (
+    DECODE,
+    PREFILL,
+    ContinuousBatchingEngine,
+    GenerationResult,
+    InflightDispatcher,
+    LinearPhaseCost,
+    Request,
+    RoutedServer,
+    ServeEngine,
+)
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab_size=128, dtype="float32")
+PARAMS = init_params(CFG, jax.random.key(0))
+
+
+def _cb_engine(cost=None, slots=4, max_seq=32):
+    return ContinuousBatchingEngine(CFG, PARAMS, max_slots=slots,
+                                    max_seq=max_seq,
+                                    cost_model=cost or LinearPhaseCost())
+
+
+def _req(rng, steps=4, prompt_len=6, **kw):
+    return Request(prompt=rng.integers(0, 128, size=prompt_len),
+                   max_new_tokens=steps, **kw)
+
+
+# ------------------------------------------------------ in-flight routing --
+def test_dispatcher_prefers_fast_decode_replica():
+    disp = InflightDispatcher([_cb_engine(), _cb_engine()])
+    disp.table.set(DECODE, np.array([0.5, 1.5]))
+    rng = np.random.default_rng(0)
+    i, _ = disp.submit(_req(rng))
+    assert i == 1  # idle replicas, decode ratio 3x -> fast one wins
+
+
+def test_dispatcher_accounts_for_backlog():
+    disp = InflightDispatcher([_cb_engine(), _cb_engine()])
+    disp.table.set(DECODE, np.array([0.5, 1.5]))
+    rng = np.random.default_rng(0)
+    # pile work on the fast replica until the slow one is the better choice
+    routed = [disp.submit(_req(rng))[0] for _ in range(6)]
+    assert routed[0] == 1
+    assert 0 in routed  # backlog eventually overcomes the ratio advantage
+
+
+def test_dispatcher_learns_per_phase_ratios():
+    """Replica 0 decodes 3x slower but prefills at the same speed: the
+    "decode" table entry must separate while "prefill" stays flat."""
+    slow = LinearPhaseCost(prefill_per_token=1e-3, decode_per_step=3e-3)
+    fast = LinearPhaseCost(prefill_per_token=1e-3, decode_per_step=1e-3)
+    disp = InflightDispatcher([_cb_engine(slow), _cb_engine(fast)])
+    rng = np.random.default_rng(1)
+    for i in range(24):
+        disp.submit(_req(rng, steps=6, arrival_time=0.004 * i))
+        disp.run_until_idle(max_steps=4)
+    disp.run_until_idle(max_steps=2000)
+    assert not disp.has_work
+    pf, dec = disp.table.ratios(PREFILL), disp.table.ratios(DECODE)
+    assert dec[1] > dec[0] + 0.2
+    assert abs(pf[1] - pf[0]) < 0.2
+
+
+def test_dispatcher_poll_finished_is_deterministic():
+    disp = InflightDispatcher([_cb_engine(), _cb_engine()])
+    rng = np.random.default_rng(2)
+    reqs = [_req(rng, arrival_time=0.001 * i) for i in range(6)]
+    for r in reqs:
+        disp.submit(r)
+    disp.run_until_idle(max_steps=1000)
+    done = disp.poll_finished()
+    assert len(done) == 6
+    times = [r.finish_time for r in done]
+    assert times == sorted(times)
+
+
+def test_dispatcher_routes_around_small_cache_replicas():
+    disp = InflightDispatcher([_cb_engine(max_seq=12), _cb_engine(max_seq=48)])
+    rng = np.random.default_rng(4)
+    i, _ = disp.submit(_req(rng, prompt_len=20))  # only replica 1 fits
+    assert i == 1
+    # prompt fits replica 0 but the full generation does not: prefer the
+    # roomy replica over silent truncation
+    i2, _ = disp.submit(_req(rng, prompt_len=6, steps=20))
+    assert i2 == 1
+    # nobody can hold the whole generation -> best-effort prompt-fit tier
+    assert disp.route(_req(rng, prompt_len=8, steps=100)) in (0, 1)
+    with pytest.raises(ValueError, match="fits no replica"):
+        disp.route(_req(rng, prompt_len=60))
+
+
+def test_windowed_feedback_learns_from_non_overlapping_rounds():
+    """Replicas that never work in the same iteration must still teach the
+    per-phase table: solo rounds accumulate until a relative comparison
+    is possible."""
+    slow = LinearPhaseCost(prefill_per_token=3e-3)
+    fast = LinearPhaseCost(prefill_per_token=1e-3)
+    disp = InflightDispatcher([_cb_engine(slow), _cb_engine(fast)])
+    rng = np.random.default_rng(5)
+    for k in range(12):
+        disp.engines[k % 2].submit(_req(rng, steps=2, prompt_len=8))
+        disp.run_until_idle(max_steps=50)  # drain: prefills never overlap
+    pf = disp.table.ratios(PREFILL)
+    assert pf[1] > pf[0] + 0.3
+
+
+def test_singleton_measurement_does_not_erase_learned_ratios():
+    """One replica running alone is the common dispatcher case: its solo
+    measurement has no relative information and must not EMA-drag the
+    learned per-phase ratios back toward 1.0."""
+    t = RatioTable(2)
+    t.set(DECODE, np.array([2.0, 0.5]))
+    for _ in range(5):
+        t.update(DECODE, times=[1.0, 0.0], units=[4, 0])   # units path
+    np.testing.assert_allclose(t.ratios(DECODE), [2.0, 0.5])
+    for _ in range(5):
+        t.update(DECODE, times=[1.0, 0.0])                 # times path
+    np.testing.assert_allclose(t.ratios(DECODE), [2.0, 0.5])
+    # two measured workers: the update applies as before
+    t.update(DECODE, times=[1.0, 1.0], units=[1, 1])
+    assert t.ratios(DECODE)[0] < 2.0
+    # a 1-worker table keeps its trivial fixpoint semantics
+    solo = RatioTable(1)
+    solo.update("k", times=[2.0], units=[4])
+    np.testing.assert_allclose(solo.ratios("k"), [1.0])
+
+
+# ------------------------------------------- zero-count masking satellite --
+def test_zero_count_replica_masked_from_ema_and_telemetry():
+    sink = ListSink()
+    engines = [ServeEngine(CFG, PARAMS, batch_size=4, max_seq=16)
+               for _ in range(2)]
+    srv = RoutedServer(engines, sink=sink)
+    # replica 0 looks useless: the whole batch goes to replica 1
+    srv.runtime.set("serve_step", np.array([1e-6, 1.0]))
+    prompts = np.random.default_rng(0).integers(0, 128, size=(4, 4),
+                                                dtype=np.int32)
+    before = srv.runtime.ratios("serve_step").copy()
+    out, counts, times = srv.serve_batch(
+        prompts, n_steps=2, times_override=np.array([123.0, 1.0]))
+    assert counts[0] == 0 and counts[1] == 4
+    assert out.shape == (4, 6)
+    # the phantom 123s never reaches telemetry or the EMA
+    assert times[0] == 0.0
+    after = srv.runtime.ratios("serve_step")
+    assert after[0] == pytest.approx(before[0])
+    st = sink.records[-1]
+    assert list(st.measured) == [False, True]
+    assert st.makespan == pytest.approx(1.0)
+    assert st.imbalance == pytest.approx(1.0)
+
+
+def test_region_stats_measured_mask_direct():
+    st = RegionStats(key="k", counts=np.array([0, 2, 3]),
+                     times=np.array([7.0, 1.0, 3.0]))
+    assert list(st.measured) == [False, True, True]
+    assert st.makespan == pytest.approx(3.0)
+    assert st.imbalance == pytest.approx(3.0 / 2.0)
+    empty = RegionStats(key="k", counts=np.array([0]), times=np.array([9.0]))
+    assert empty.imbalance == 1.0 and empty.makespan == 0.0
+
+
+# ------------------------------------- heterogeneous capacities / wrapper --
+def test_serve_batch_heterogeneous_capacities_with_overflow():
+    engines = [ServeEngine(CFG, PARAMS, batch_size=2, max_seq=16),
+               ServeEngine(CFG, PARAMS, batch_size=6, max_seq=16)]
+    srv = RoutedServer(engines)
+    # raw Eq.-3 split of 8 would be [7, 1]: replica 0 overflows its 2 slots
+    srv.runtime.set("serve_step", np.array([7.0, 1.0]))
+    prompts = np.random.default_rng(1).integers(0, 128, size=(8, 4),
+                                                dtype=np.int32)
+    out, counts, _ = srv.serve_batch(prompts, n_steps=2)
+    assert counts.tolist() == [2, 6]  # clamped + redistributed
+    assert out.shape == (8, 6)
+    with pytest.raises(ValueError):  # beyond aggregate capacity: real error
+        srv.serve_batch(np.zeros((9, 4), dtype=np.int32), n_steps=1)
+
+
+def test_serve_batch_rejects_steps_beyond_max_seq():
+    """The (B, s0 + n_steps) output contract cannot be met when the cache
+    is too small; that must be a loud error, not a narrower array."""
+    srv = RoutedServer([ServeEngine(CFG, PARAMS, batch_size=2, max_seq=8)])
+    prompts = np.zeros((2, 6), dtype=np.int32)
+    with pytest.raises(ValueError, match="max_seq"):
+        srv.serve_batch(prompts, n_steps=4)
+
+
+def test_serve_batch_zero_steps_returns_prompts_unchanged():
+    srv = RoutedServer([ServeEngine(CFG, PARAMS, batch_size=4, max_seq=16)])
+    prompts = np.random.default_rng(3).integers(0, 128, size=(3, 4),
+                                                dtype=np.int32)
+    out, counts, times = srv.serve_batch(prompts, n_steps=0)
+    np.testing.assert_array_equal(out, prompts)
+    assert counts.sum() == 3 and times.sum() == 0.0
+
+
+def test_serve_batch_reuses_engines_across_rounds():
+    engines = [ServeEngine(CFG, PARAMS, batch_size=4, max_seq=16)]
+    srv = RoutedServer(engines)
+    prompts = np.random.default_rng(2).integers(0, 128, size=(3, 4),
+                                                dtype=np.int32)
+    for _ in range(3):
+        out, counts, _ = srv.serve_batch(prompts, n_steps=2)
+        assert out.shape == (3, 6)
+        assert counts.sum() == 3
+    # long-lived engine stays bounded: finished requests are drained
+    assert srv._cb[0].finished == []
+    assert srv._cb[0].manager.n_free == 4
+
+
+# ----------------------------------------------------- satellite fixes ----
+def test_replica_slot_counts_cover_batch_with_remainder():
+    assert replica_slot_counts(4, 2) == [2, 2]
+    assert replica_slot_counts(5, 2) == [3, 2]
+    assert replica_slot_counts(7, 3) == [3, 2, 2]
+    assert replica_slot_counts(2, 4) == [1, 1, 1, 1]  # every replica >= 1
+    with pytest.raises(ValueError):
+        replica_slot_counts(4, 0)
+
+
+def test_tokens_per_second_uses_real_request_count():
+    tokens = np.zeros((4, 10), dtype=np.int32)  # 2 real rows + 2 padding
+    r = GenerationResult(tokens=tokens, prefill_seconds=0.1,
+                         decode_seconds=1.0, steps=5, n_requests=2)
+    assert r.tokens_per_second == pytest.approx(10.0)
+    legacy = GenerationResult(tokens=tokens, prefill_seconds=0.1,
+                              decode_seconds=1.0, steps=5)
+    assert legacy.tokens_per_second == pytest.approx(20.0)
