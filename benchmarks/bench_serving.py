@@ -102,7 +102,7 @@ def run_barrier(machine: str, p, seed: int = 0):
 
 def _rows(machine: str, p):
     cont, cost = run_continuous(machine, p)
-    barr, _ = run_barrier(machine, p)
+    barr, barr_cost = run_barrier(machine, p)
     pf = cost.ratios(PREFILL)
     dec = cost.ratios(DECODE)
     rows = [
@@ -114,11 +114,13 @@ def _rows(machine: str, p):
          f"|tok_s={cont.throughput:.1f}"
          f"|goodput={cont.goodput:.2f}"
          f"|ratio_spread_prefill={pf.max() / pf.min():.2f}"
-         f"|ratio_spread_decode={dec.max() / dec.min():.2f}"),
+         f"|ratio_spread_decode={dec.max() / dec.min():.2f}"
+         f"|decode_bw_frac={cost.achieved_bandwidth_fraction():.3f}"),
         (f"serving_barrier_{machine}", fmt(barr.ttft[50]),
          f"ttft_p90_ms={barr.ttft[90] * 1e3:.1f}"
          f"|tok_s={barr.throughput:.1f}"
          f"|goodput={barr.goodput:.2f}"
+         f"|decode_bw_frac={barr_cost.achieved_bandwidth_fraction():.3f}"
          f"|ttft_p50_win_pct="
          f"{(barr.ttft[50] / max(cont.ttft[50], 1e-9) - 1) * 100:.0f}"),
     ]

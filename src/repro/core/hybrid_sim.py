@@ -65,6 +65,27 @@ class SimulatedHybridCPU:
                 s *= factor
         return s
 
+    def task_wall_time(self, core: int, start: float, base_seconds: float) -> float:
+        """Wall seconds to complete ``base_seconds`` of unthrottled execution
+        starting at virtual time ``start``, integrating the (piecewise-
+        constant) background slowdown over the task's own interval rather
+        than sampling it once at ``start`` — a throttle interval that begins
+        or ends mid-task is applied exactly for the portion it overlaps.
+        """
+        if base_seconds <= 0:
+            return 0.0
+        boundaries = sorted({t for t0, t1, idx, _ in self.background
+                             if idx == core for t in (t0, t1) if t > start})
+        t, remaining = start, base_seconds
+        for b in boundaries:
+            s = self.background_slowdown(core, t)
+            capacity = (b - t) / s  # base-seconds executable before b
+            if remaining <= capacity:
+                return (t + remaining * s) - start
+            remaining -= capacity
+            t = b
+        return (t + remaining * self.background_slowdown(core, t)) - start
+
     def task_time(self, worker: int, isa: str, work: float, now: float) -> float:
         if work <= 0:
             return 0.0
@@ -73,11 +94,18 @@ class SimulatedHybridCPU:
         if tp is None:
             raise KeyError(f"core {spec.name} has no throughput entry for ISA {isa!r}")
         jitter = float(np.exp(self._rng.normal(0.0, spec.jitter)))
-        return work / (tp * jitter) * self.background_slowdown(worker, now)
+        return self.task_wall_time(worker, now, work / (tp * jitter))
 
     def optimal_makespan(self, isa: str, total_work: float) -> float:
         """Lower bound: all cores busy until the same instant (no jitter)."""
         return total_work / self.true_throughput(isa).sum()
+
+    @property
+    def socket_bandwidth(self) -> float:
+        """Aggregate streaming bandwidth (bytes/s) when every core draws its
+        sustainable share — the MLC-measured number the paper's >90% achieved-
+        bandwidth claim is a fraction of."""
+        return float(self.true_throughput("membw").sum())
 
 
 def _core(name: str, kind: str, ghz: float, vnni_lanes: float, mem_share: float,

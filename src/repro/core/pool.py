@@ -15,6 +15,10 @@ the same interface:
 Both report times with the same shape so the scheduler/runtime code is
 identical — exactly the property the paper relies on (the scheduler only ever
 sees (worker, time) pairs).
+
+A region may assign *several* sub-tasks to the same worker (chunked shard
+dispatch does this); each worker runs its sub-tasks sequentially and its
+reported time is the sum over them.
 """
 
 from __future__ import annotations
@@ -22,7 +26,7 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
@@ -55,8 +59,9 @@ class ThreadWorkerPool:
 
     def __init__(self, n_workers: int):
         self.n_workers = n_workers
-        self._tasks: list[Optional[SubTask]] = [None] * n_workers
+        self._tasks: list[List[SubTask]] = [[] for _ in range(n_workers)]
         self._times = np.zeros(n_workers)
+        self._errors: list[Optional[BaseException]] = [None] * n_workers
         self._go = [threading.Event() for _ in range(n_workers)]
         self._done = [threading.Event() for _ in range(n_workers)]
         self._stop = False
@@ -73,30 +78,46 @@ class ThreadWorkerPool:
             self._go[i].clear()
             if self._stop:
                 return
-            task = self._tasks[i]
             t0 = time.perf_counter()
-            if task is not None and task.fn is not None and task.size > 0:
-                task.fn(task.start, task.size)
-            self._times[i] = time.perf_counter() - t0
-            self._done[i].set()
+            # A raising shard fn must not kill the worker thread: run()
+            # joins on _done (a dead thread would deadlock it) and
+            # re-raises the stored error on the caller's side.
+            try:
+                for task in self._tasks[i]:
+                    if task.fn is not None and task.size > 0:
+                        task.fn(task.start, task.size)
+            except BaseException as e:
+                self._errors[i] = e
+            finally:
+                self._times[i] = time.perf_counter() - t0
+                self._done[i].set()
 
     def run(self, subtasks: Sequence[SubTask]) -> np.ndarray:
         """Execute one parallel region; returns per-worker times (seconds).
 
         Workers with no sub-task report time 0 (skipped by the runtime).
+        A worker assigned several sub-tasks runs them back to back and
+        reports the total.
         """
         self._times[:] = 0.0
-        self._tasks = [None] * self.n_workers
-        active = []
+        self._errors = [None] * self.n_workers
+        self._tasks = [[] for _ in range(self.n_workers)]
         for st in subtasks:
             if st.size > 0:
-                self._tasks[st.worker] = st
-                active.append(st.worker)
+                self._tasks[st.worker].append(st)
+        active = [w for w in range(self.n_workers) if self._tasks[w]]
         for w in active:
             self._done[w].clear()
             self._go[w].set()
         for w in active:
             self._done[w].wait()
+        errors = [e for e in self._errors if e is not None]
+        if errors:
+            # chain concurrent failures so none is silently discarded —
+            # the traceback shows every worker's error, not just worker 0's
+            for first, rest in zip(errors, errors[1:]):
+                first.__cause__ = rest
+            raise errors[0]
         return self._times.copy()
 
     def close(self) -> None:
@@ -114,7 +135,9 @@ class VirtualWorkerPool:
     ``task_time(worker: int, isa: str, work: float, now: float) -> float``
     (see :class:`repro.core.hybrid_sim.SimulatedHybridCPU`).  The pool keeps a
     virtual clock that advances by the *makespan* of each region, exactly as a
-    barrier-synchronized parallel-for would.
+    barrier-synchronized parallel-for would.  A worker's sub-tasks run
+    sequentially, each starting at the virtual instant the previous one
+    finished, so time-varying background load lands on the right sub-task.
     """
 
     def __init__(self, machine, isa: str = "avx2", execute: bool = False):
@@ -131,8 +154,8 @@ class VirtualWorkerPool:
                 continue
             if self.execute and st.fn is not None:
                 st.fn(st.start, st.size)
-            times[st.worker] = self.machine.task_time(
-                st.worker, self.isa, st.work, self.clock
+            times[st.worker] += self.machine.task_time(
+                st.worker, self.isa, st.work, self.clock + times[st.worker]
             )
         self.clock += float(times.max(initial=0.0))
         return times

@@ -13,6 +13,7 @@ the paper's ratio table, and re-adapting if the environment drifts.
 from __future__ import annotations
 
 import math
+import threading
 from dataclasses import dataclass, field
 from typing import Any, Dict, Hashable, Sequence, Tuple
 
@@ -44,6 +45,9 @@ class KernelTuner:
         self.alpha = alpha
         self.min_trials = min_trials
         self._tables: Dict[Hashable, Dict[Hashable, _Entry]] = {}
+        # shard dispatch reports from worker threads concurrently; the
+        # read-modify-write of an entry's EMA must not interleave
+        self._lock = threading.Lock()
 
     def _table(self, key: Hashable, configs: Sequence[Hashable]):
         tab = self._tables.setdefault(key, {})
@@ -52,23 +56,25 @@ class KernelTuner:
         return tab
 
     def select(self, key: Hashable, configs: Sequence[Hashable]) -> Hashable:
-        tab = self._table(key, configs)
-        cold = [c for c in configs if tab[c].count < self.min_trials]
-        if cold:
-            return min(cold, key=lambda c: tab[c].count)
-        return min(configs, key=lambda c: tab[c].ema)
+        with self._lock:
+            tab = self._table(key, configs)
+            cold = [c for c in configs if tab[c].count < self.min_trials]
+            if cold:
+                return min(cold, key=lambda c: tab[c].count)
+            return min(configs, key=lambda c: tab[c].ema)
 
     def report(self, key: Hashable, config: Hashable, seconds: float) -> None:
-        tab = self._tables.setdefault(key, {})
-        e = tab.setdefault(config, _Entry())
-        if e.count == 0 or not math.isfinite(e.ema):
-            e.ema = seconds
-        else:
-            e.ema = self.alpha * e.ema + (1.0 - self.alpha) * seconds
-        e.count += 1
+        with self._lock:
+            e = self._tables.setdefault(key, {}).setdefault(config, _Entry())
+            if e.count == 0 or not math.isfinite(e.ema):
+                e.ema = seconds
+            else:
+                e.ema = self.alpha * e.ema + (1.0 - self.alpha) * seconds
+            e.count += 1
 
     def best(self, key: Hashable) -> Hashable:
-        tab = self._tables.get(key)
-        if not tab:
-            raise KeyError(f"no measurements for {key!r}")
-        return min(tab, key=lambda c: tab[c].ema)
+        with self._lock:
+            tab = self._tables.get(key)
+            if not tab:
+                raise KeyError(f"no measurements for {key!r}")
+            return min(tab, key=lambda c: tab[c].ema)

@@ -1,10 +1,22 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
 ``<name>.py`` holds the pallas_call + BlockSpec kernels, ``ops.py`` the jit'd
-public wrappers (padding + tuner dispatch), ``ref.py`` the pure-jnp oracles.
+public wrappers (padding + tuner dispatch), ``ref.py`` the pure-jnp oracles,
+``dispatch.py`` the hybrid per-core balanced shard dispatcher (the paper's
+runtime applied to these kernels).
 """
 
 from .ops import int8_gemm, int8_linear, q4_matmul, TunedMatmul
+from .dispatch import GEMM_ISA, GEMV_ISA, HybridKernelDispatcher
 from . import ref
 
-__all__ = ["int8_gemm", "int8_linear", "q4_matmul", "TunedMatmul", "ref"]
+__all__ = [
+    "int8_gemm",
+    "int8_linear",
+    "q4_matmul",
+    "TunedMatmul",
+    "ref",
+    "HybridKernelDispatcher",
+    "GEMM_ISA",
+    "GEMV_ISA",
+]

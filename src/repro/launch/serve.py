@@ -24,7 +24,8 @@ import numpy as np
 
 from repro.configs import get_config, reduced_config
 from repro.core.hybrid_sim import MACHINES
-from repro.models import init_params
+from repro.kernels import GEMV_ISA, HybridKernelDispatcher
+from repro.models import balanced_lm_head, init_params
 from repro.runtime import RatioStore, RatioTable
 from repro.serving import (
     DECODE,
@@ -72,6 +73,10 @@ def main() -> int:
                     help="JSON path to warm-start/persist replica ratios")
     ap.add_argument("--legacy-batch", action="store_true",
                     help="run the seed-era whole-batch serve_batch path")
+    ap.add_argument("--balanced-head", action="store_true",
+                    help="run the LM head as balanced per-core Q4 Pallas "
+                         "shards (hybrid kernel dispatch) instead of inside "
+                         "the jitted trunk")
     args = ap.parse_args()
 
     cfg = get_config(args.arch) if args.preset == "full" else reduced_config(args.arch)
@@ -96,13 +101,22 @@ def main() -> int:
         return 0
 
     chunk = args.prefill_chunk if args.prefill_chunk > 0 else None
-    engines = []
+    engines, dispatchers = [], []
     for i, n_slots in enumerate(slot_counts):
         cost = (None if args.machine == "wall"
                 else HybridPhaseCost(args.machine, seed=args.seed + i))
+        head = None
+        if args.balanced_head:
+            disp = (HybridKernelDispatcher.threaded(4, keep_stats=False)
+                    if args.machine == "wall"
+                    else HybridKernelDispatcher.virtual(
+                        args.machine, seed=args.seed + i, execute=True,
+                        keep_stats=False))
+            dispatchers.append(disp)
+            head = balanced_lm_head(cfg, params, disp)
         engines.append(ContinuousBatchingEngine(
             cfg, params, max_slots=n_slots, max_seq=max_seq,
-            prefill_chunk=chunk, cost_model=cost))
+            prefill_chunk=chunk, cost_model=cost, balanced_head=head))
 
     table = RatioTable(args.replicas, alpha=0.3)
     store = RatioStore(args.ratios) if args.ratios else None
@@ -140,6 +154,14 @@ def main() -> int:
         print(f"[serve] core ratio spread (replica 0): "
               f"prefill={core.ratios(PREFILL).max() / core.ratios(PREFILL).min():.2f}x "
               f"decode={core.ratios(DECODE).max() / core.ratios(DECODE).min():.2f}x")
+        print(f"[serve] decode achieved-bandwidth fraction (replica 0): "
+              f"{engines[0].cost_model.achieved_bandwidth_fraction():.2f}")
+    if args.balanced_head and args.machine != "wall":
+        d0 = dispatchers[0]
+        kt = d0.table.ratios(GEMV_ISA)
+        print(f"[serve] balanced-head kernel table (replica 0): "
+              f"membw spread={kt.max() / kt.min():.2f}x "
+              f"achieved_bw_frac={d0.achieved_bandwidth_fraction():.2f}")
     sample = requests[0].tokens
     print("[serve] sample:", sample[-min(16, args.steps):].tolist())
     if store is not None:

@@ -6,10 +6,12 @@ from .transformer import (
     init_state,
     abstract_state,
     init_slot_state,
+    balanced_lm_head,
     forward,
     loss_fn,
     ForwardOut,
 )
+from .layers import BalancedLinear, BalancedQuantLinear
 
 __all__ = [
     "init_params",
@@ -17,7 +19,10 @@ __all__ = [
     "init_state",
     "abstract_state",
     "init_slot_state",
+    "balanced_lm_head",
     "forward",
     "loss_fn",
     "ForwardOut",
+    "BalancedLinear",
+    "BalancedQuantLinear",
 ]

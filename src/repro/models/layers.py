@@ -84,6 +84,77 @@ def logits_fwd(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
     return (x @ w).astype(jnp.float32)
 
 
+# ------------------------------------------------------- balanced linears --
+class BalancedQuantLinear:
+    """Host-side Fp32-Int4-Fp32 linear ``y = x @ W.T`` executed as balanced
+    per-core shards of the Q4 Pallas kernel (the paper's decode hot path).
+
+    The weight stays packed (Q4_0); each call plans one contiguous N-row
+    shard per core from the dispatcher's per-ISA ratio table, runs the real
+    kernel shard-wise, and feeds shard times back — the model hot path *is*
+    the control loop.  ``isa`` selects the table key per phase:
+    ``"membw"`` for memory-bound decode GEMV, ``"avx_vnni"`` when the same
+    weight runs a compute-bound prefill GEMM.
+    """
+
+    def __init__(self, qw, dispatcher):
+        self.qw = qw
+        self.dispatcher = dispatcher
+
+    @classmethod
+    def from_dense(cls, w: jax.Array, dispatcher) -> "BalancedQuantLinear":
+        """Quantize a dense (N, K) weight to Q4_0 and bind the dispatcher."""
+        from repro.quant.q4 import quantize_q4_0
+
+        return cls(quantize_q4_0(jnp.asarray(w, jnp.float32)), dispatcher)
+
+    @property
+    def out_features(self) -> int:
+        return self.qw.out_features
+
+    def __call__(self, x: jax.Array, *, isa: str = "membw") -> jax.Array:
+        unflatten = x.ndim == 3
+        if unflatten:  # (B, S, d) hidden states -> one (B*S, d) GEMM/GEMV
+            b, s, d = x.shape
+            x = x.reshape(b * s, d)
+        y = self.dispatcher.q4_matmul(x.astype(jnp.float32), self.qw,
+                                      isa=isa)
+        return y.reshape(b, s, -1) if unflatten else y
+
+
+class BalancedLinear:
+    """Dense linear executed as the paper's prefill path: dynamic u8
+    activation quantization + s8 weights through balanced per-core INT8
+    GEMM shards (``avx_vnni`` table key), dequantized back to f32."""
+
+    def __init__(self, w_s8, dispatcher):
+        self.w = w_s8
+        self.dispatcher = dispatcher
+
+    @classmethod
+    def from_dense(cls, w: jax.Array, dispatcher) -> "BalancedLinear":
+        from repro.quant.int8 import quantize_s8_symmetric
+
+        return cls(quantize_s8_symmetric(jnp.asarray(w, jnp.float32)),
+                   dispatcher)
+
+    @property
+    def out_features(self) -> int:
+        return self.w.q.shape[0]
+
+    def __call__(self, x: jax.Array, *, isa: str = "avx_vnni") -> jax.Array:
+        from repro.quant.int8 import quantize_u8_dynamic, u8s8_matmul_decompose
+
+        unflatten = x.ndim == 3
+        if unflatten:
+            b, s, d = x.shape
+            x = x.reshape(b * s, d)
+        qa = quantize_u8_dynamic(x.astype(jnp.float32))
+        acc = self.dispatcher.int8_gemm(qa.q, self.w.q, isa=isa)
+        y = u8s8_matmul_decompose(qa, self.w, acc)
+        return y.reshape(b, s, -1) if unflatten else y
+
+
 # ----------------------------------------------------------------- rotary --
 def rope_angles(positions: jax.Array, dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
     """positions (...,) -> cos/sin (..., dim//2)."""

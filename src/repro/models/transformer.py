@@ -174,6 +174,7 @@ def forward(
     pos_offset: jax.Array | int = 0,
     capacity: Optional[int] = None,
     logits_mode: str = "all",
+    apply_head: bool = True,
     remat: bool = False,
 ) -> ForwardOut:
     """Trunk forward.
@@ -181,6 +182,9 @@ def forward(
     tokens: (B, S) int32 — or ``embeds`` (B, S, d) for embed-input archs
     (musicgen stub).  ``prefix_embeds`` (B, P, d) is prepended (internvl2
     stub).  ``state`` enables prefill/decode (returned updated).
+    ``apply_head=False`` skips the LM-head matmul and returns the final-
+    normed hidden states in the ``logits`` slot — for callers that run the
+    head outside the jitted trunk (balanced hybrid kernel dispatch).
     """
     if embeds is not None:
         x = embeds.astype(cfg.cdtype)
@@ -231,11 +235,29 @@ def forward(
         # (B, S, V) tensor (53 GB/device for llama4 at prefill_32k).
         x = x[:, -1:, :]
     x = norm_fwd(cfg, params["final_norm"], x)
-    logits = logits_fwd(cfg, params["embed"], x)
-    logits = constrain(logits, ("dp", None, "tp"))
+    if apply_head:
+        logits = logits_fwd(cfg, params["embed"], x)
+        logits = constrain(logits, ("dp", None, "tp"))
+    else:
+        logits = x.astype(jnp.float32)
     n_moe = max(1, sum(1 for _, f in cfg.layer_plan() if f == "moe"))
     aux = {"lb_loss": lb / n_moe, "dropped": dropped / n_moe}
     return ForwardOut(logits=logits, state=new_state if have_state else None, aux=aux)
+
+
+def balanced_lm_head(cfg: ModelConfig, params: dict, dispatcher):
+    """Bind the model's LM head to a hybrid kernel dispatcher: the (vocab,
+    d_model) head matrix is Q4_0-quantized and every call runs as balanced
+    per-core Pallas shards (see
+    :class:`~repro.models.layers.BalancedQuantLinear`).  Use with
+    ``forward(..., apply_head=False)``: the decode-step Fp32-Int4-Fp32 GEMV
+    — the paper's hot path — then executes through the ratio-table loop
+    instead of inside the jitted trunk."""
+    from .layers import BalancedQuantLinear
+
+    w = (params["embed"]["tok"] if cfg.tie_embeddings
+         else params["embed"]["out"].T)  # (vocab, d_model) = (N, K)
+    return BalancedQuantLinear.from_dense(w, dispatcher)
 
 
 def loss_fn(

@@ -44,6 +44,7 @@ class RegionStats:
     counts: np.ndarray
     times: np.ndarray
     ratios: Optional[np.ndarray] = None  # table state after feedback
+    bytes: float = 0.0                   # bytes moved by the region (0 = n/a)
 
     @property
     def kernel(self) -> str:  # seed-era alias (RegionStats.kernel)
@@ -73,6 +74,16 @@ class RegionStats:
         if active.size == 0:
             return 1.0
         return float(active.max() / active.mean())
+
+    @property
+    def bandwidth(self) -> float:
+        """Achieved bytes/s over the region (bytes moved / makespan) — the
+        numerator of the paper's achieved-bandwidth fraction.  0 when the
+        region recorded no byte accounting or no time."""
+        mk = self.makespan
+        if self.bytes <= 0 or mk <= 0:
+            return 0.0
+        return self.bytes / mk
 
 
 @runtime_checkable
@@ -139,14 +150,18 @@ class Balancer:
         return self.policy.plan(total)
 
     def report(self, plan: Plan, times, *, update: bool = True,
-               label: Optional[str] = None) -> RegionStats:
+               label: Optional[str] = None,
+               bytes_moved: float = 0.0) -> RegionStats:
         """Feed observed times back through the policy and emit telemetry.
-        ``label`` overrides the stats key (e.g. kernel name vs. ISA key)."""
+        ``label`` overrides the stats key (e.g. kernel name vs. ISA key);
+        ``bytes_moved`` records the region's byte traffic for bandwidth
+        accounting."""
         times = np.asarray(times, dtype=np.float64)
         ratios = self.policy.report(plan, times) if update else None
         st = RegionStats(key=label or plan.key, counts=plan.counts,
                          times=times,
-                         ratios=None if ratios is None else ratios.copy())
+                         ratios=None if ratios is None else ratios.copy(),
+                         bytes=float(bytes_moved))
         if self.keep_stats:
             self.stats.append(st)
         if self.sink is not None:

@@ -196,9 +196,18 @@ class RatioStore:
 
     def load_into(self, table: RatioTable) -> bool:
         """Warm-start an existing table from the store.  Returns False (and
-        leaves ``table`` untouched) when nothing compatible is stored."""
+        leaves ``table`` untouched) when nothing compatible is stored.
+
+        Compatible means same worker count *and* same learning conventions:
+        a sum-normalized table loaded into a mean-normalized one (or vice
+        versa) is off by a factor of ``n_workers`` and would corrupt the
+        learned ratios, and a different ``alpha`` silently changes the
+        filter the stored history was produced under — both are refused
+        rather than blended."""
         stored = self.load()
-        if stored is None or stored.n_workers != table.n_workers:
+        if (stored is None or stored.n_workers != table.n_workers
+                or stored.normalize != table.normalize
+                or stored.alpha != table.alpha):
             return False
         for key in stored.keys():
             table.set(key, stored.ratios(key))

@@ -28,6 +28,7 @@ from .phases import (
     HybridPhaseCost,
     LinearPhaseCost,
     PhaseCostModel,
+    PHASE_ISA,
     PREFILL,
 )
 from .metrics import LatencyReport, percentiles
@@ -54,6 +55,7 @@ __all__ = [
     "poisson_requests",
     "PREFILL",
     "DECODE",
+    "PHASE_ISA",
     "PhaseCostModel",
     "HybridPhaseCost",
     "LinearPhaseCost",

@@ -42,6 +42,7 @@ from repro.runtime import (
     clamp_to_capacity,
 )
 
+from .phases import DECODE, PHASE_ISA, PREFILL
 from .request import FinishReason, Request, RequestState
 from .scheduler import IterationScheduler, IterationStats
 from .slots import SlotCacheManager
@@ -148,12 +149,18 @@ class ContinuousBatchingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int,
                  max_seq: int, prefill_chunk: Optional[int] = None,
                  sampler: Optional[Callable] = None, cost_model=None,
-                 donate_state: bool = True):
+                 balanced_head=None, donate_state: bool = True):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.cost_model = cost_model
+        # Optional hybrid kernel dispatch of the LM head (see
+        # models.balanced_lm_head): the jitted trunk stops before the head
+        # and the decode-step Fp32-Int4-Fp32 GEMV runs as balanced per-core
+        # Pallas shards with per-phase ISA table keys.
+        self.balanced_head = balanced_head
+        apply_head = balanced_head is None
         self.manager = SlotCacheManager(cfg, max_slots, max_seq)
         self.scheduler = IterationScheduler(prefill_chunk)
         self.now = 0.0
@@ -171,18 +178,25 @@ class ContinuousBatchingEngine:
         @jax.jit
         def _prefill(params, tokens, state, offset):
             out = forward(cfg, params, tokens, state=state, pos_offset=offset,
-                          logits_mode="last")
+                          logits_mode="last", apply_head=apply_head)
             return out.logits[:, -1, :], out.state
 
         donate = (2,) if donate_state else ()
 
         @functools.partial(jax.jit, donate_argnums=donate)
         def _decode(params, tok, state, pos):
-            out = forward(cfg, params, tok, state=state, pos_offset=pos)
+            out = forward(cfg, params, tok, state=state, pos_offset=pos,
+                          apply_head=apply_head)
             return out.logits[:, -1, :], out.state
 
         self._prefill = _prefill
         self._decode = _decode
+
+    def _head(self, hidden: jax.Array, phase: str) -> jax.Array:
+        """Apply the (possibly balanced) LM head to (B, d) hidden states."""
+        if self.balanced_head is None:
+            return hidden  # jitted trunk already produced logits
+        return self.balanced_head(hidden, isa=PHASE_ISA[phase])
 
     # ------------------------------------------------------------- intake --
     def submit(self, request: Request) -> int:
@@ -284,6 +298,13 @@ class ContinuousBatchingEngine:
             logits, small = self._prefill(
                 self.params, tokens, self._partial,
                 jnp.asarray(chunk.start, jnp.int32))
+            tok = None
+            if chunk.is_last:
+                # head + sampling inside the timed window, matching the
+                # decode lane — with a balanced head the host-side GEMV is
+                # part of the step, so TTFT must include it
+                tok = int(np.asarray(
+                    self._pick(self._head(logits, PREFILL))).reshape(-1)[0])
             if self.cost_model is None:
                 logits.block_until_ready()
                 dt = time.perf_counter() - t0
@@ -297,7 +318,6 @@ class ContinuousBatchingEngine:
             st.prefill_seconds = dt
             if chunk.is_last:
                 self._partial = None
-                tok = int(np.asarray(self._pick(logits)).reshape(-1)[0])
                 req.generated.append(tok)
                 req.first_token_time = self.now
                 man.adopt(req.slot, small, req.prompt_len, tok)
@@ -313,7 +333,8 @@ class ContinuousBatchingEngine:
             pos = jnp.asarray(man.pos)
             t0 = time.perf_counter()
             logits, man.state = self._decode(self.params, tok, man.state, pos)
-            next_tok = np.asarray(self._pick(logits)).reshape(-1)
+            next_tok = np.asarray(
+                self._pick(self._head(logits, DECODE))).reshape(-1)
             if self.cost_model is None:
                 dt = time.perf_counter() - t0
             else:

@@ -36,12 +36,19 @@ from repro.runtime import (
     run_plan,
 )
 
-__all__ = ["PREFILL", "DECODE", "PHASES", "PhaseCostModel",
+__all__ = ["PREFILL", "DECODE", "PHASES", "PHASE_ISA", "PhaseCostModel",
            "HybridPhaseCost", "LinearPhaseCost", "phase_balancers"]
 
 PREFILL = "prefill"
 DECODE = "decode"
 PHASES = (PREFILL, DECODE)
+
+# Each phase's primary ISA (paper §2.1: kernels sharing a bottleneck share
+# ratio tables): prefill GEMMs are compute-bound VNNI work, decode GEMVs are
+# bound by shared memory bandwidth.  Kernel-level dispatch (e.g. a
+# :class:`~repro.models.layers.BalancedQuantLinear` head) keys its per-core
+# ratio table with this map.
+PHASE_ISA = {PREFILL: "avx_vnni", DECODE: "membw"}
 
 
 def phase_balancers(table: RatioTable, sink: Optional[StatsSink] = None):
@@ -96,18 +103,26 @@ class HybridPhaseCost:
         self.decode_bytes_per_step = decode_bytes_per_step
         self.kv_bytes_per_ctx_token = kv_bytes_per_ctx_token
         self.decode_units = decode_units
-        self._pools = {PREFILL: VirtualWorkerPool(machine, isa="avx_vnni"),
-                       DECODE: VirtualWorkerPool(machine, isa="membw")}
+        self._pools = {phase: VirtualWorkerPool(machine, isa=PHASE_ISA[phase])
+                       for phase in PHASES}
         self._balancers = phase_balancers(self.table, sink)
+        # bytes-moved / busy-seconds accounting for the paper's achieved-
+        # bandwidth fraction (decode is the bandwidth-bound phase).
+        self._bytes = {phase: 0.0 for phase in PHASES}
+        self._busy = {phase: 0.0 for phase in PHASES}
 
     def ratios(self, phase: str) -> np.ndarray:
         return self.table.ratios(phase)
 
-    def _region(self, phase: str, n_units: int, work_per_unit: float) -> float:
+    def _region(self, phase: str, n_units: int, work_per_unit: float,
+                bytes_total: float = 0.0) -> float:
         bal = self._balancers[phase]
         plan = bal.plan(n_units)
         times = run_plan(self._pools[phase], plan, None, work_per_unit)
-        bal.report(plan, times)
+        st = bal.report(plan, times, bytes_moved=bytes_total)
+        if bytes_total > 0 and st.makespan > 0:
+            self._bytes[phase] += bytes_total
+            self._busy[phase] += st.makespan
         return float(times.max(initial=0.0))
 
     def prefill_seconds(self, n_tokens: int, ctx: int) -> float:
@@ -125,7 +140,17 @@ class HybridPhaseCost:
         total_bytes = (self.decode_bytes_per_step
                        + n_active * max(ctx, 0) * self.kv_bytes_per_ctx_token)
         return self._region(DECODE, self.decode_units,
-                            total_bytes / self.decode_units)
+                            total_bytes / self.decode_units,
+                            bytes_total=total_bytes)
+
+    def achieved_bandwidth_fraction(self, phase: str = DECODE) -> float:
+        """Achieved bytes/s of the phase's regions so far, as a fraction of
+        the machine's streaming (MLC-analogue) socket bandwidth — the
+        paper's >90% headline metric.  0 before any bytes moved."""
+        busy = self._busy.get(phase, 0.0)
+        if busy <= 0:
+            return 0.0
+        return (self._bytes[phase] / busy) / self.machine.socket_bandwidth
 
 
 class LinearPhaseCost:

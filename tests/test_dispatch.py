@@ -1,0 +1,259 @@
+"""Hybrid kernel dispatch (kernels.dispatch) + worker-pool timing fixes.
+
+Covers the PR-3 regressions — duplicate per-worker sub-tasks must
+accumulate (not last-write-win), background-load intervals must integrate
+over the task's own time span — and the dispatch layer's contracts: shard
+outputs identical to the monolithic kernels, ratio convergence and
+achieved-bandwidth fractions on the simulated hybrid machines, and the
+balanced model-layer wrappers.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import CoreSpec, SimulatedHybridCPU, make_machine
+from repro.core.pool import SubTask, ThreadWorkerPool, VirtualWorkerPool
+from repro.kernels import (
+    GEMV_ISA,
+    HybridKernelDispatcher,
+    int8_linear,
+    ops,
+    ref,
+)
+from repro.models.layers import BalancedLinear, BalancedQuantLinear
+from repro.quant import (
+    quantize_q4_0,
+    quantize_s8_symmetric,
+    quantize_u8_dynamic,
+)
+from repro.runtime import KernelSpec
+
+RNG = np.random.default_rng(0)
+
+
+def one_core_machine(tp: float = 1.0, background=()):
+    """Deterministic single-core machine: jitter 0, throughput ``tp``."""
+    m = SimulatedHybridCPU(
+        cores=[CoreSpec("C0", "P", {"avx2": tp}, jitter=0.0)])
+    m.background.extend(background)
+    return m
+
+
+# ------------------------------------------------- pool: multi-subtask ----
+def test_thread_pool_runs_all_subtasks_per_worker():
+    """Regression: two sub-tasks for the same worker used to last-write-win
+    (the first one's work silently dropped)."""
+    out = np.zeros(8)
+    fn = lambda start, size: out.__setitem__(slice(start, start + size), 1)
+    pool = ThreadWorkerPool(2)
+    try:
+        times = pool.run([
+            SubTask(worker=0, start=0, size=2, work=2, fn=fn),
+            SubTask(worker=0, start=2, size=2, work=2, fn=fn),
+            SubTask(worker=1, start=4, size=4, work=4, fn=fn),
+        ])
+    finally:
+        pool.close()
+    np.testing.assert_array_equal(out, 1.0)
+    assert times[0] > 0 and times[1] > 0
+
+
+def test_thread_pool_propagates_shard_errors_without_deadlock():
+    """A raising shard fn must surface in run() (not kill the worker thread
+    and hang the join), and the pool must stay usable afterwards."""
+    def bad(start, size):
+        raise RuntimeError("boom")
+
+    pool = ThreadWorkerPool(2)
+    try:
+        with pytest.raises(RuntimeError, match="boom"):
+            pool.run([SubTask(worker=0, start=0, size=1, work=1, fn=bad)])
+        times = pool.run([SubTask(worker=0, start=0, size=1, work=1,
+                                  fn=lambda s, z: None)])
+        assert times[0] >= 0
+    finally:
+        pool.close()
+
+
+def test_virtual_pool_accumulates_duplicate_worker_times():
+    """Regression: ``times[st.worker] =`` dropped all but the last
+    sub-task's time; chunked shard dispatch needs the sum."""
+    pool = VirtualWorkerPool(one_core_machine(tp=1.0), isa="avx2")
+    times = pool.run([
+        SubTask(worker=0, start=0, size=1, work=3.0),
+        SubTask(worker=0, start=1, size=1, work=4.0),
+    ])
+    np.testing.assert_allclose(times[0], 7.0)
+    assert pool.clock == pytest.approx(7.0)
+
+
+# ------------------------------------- background-interval integration ----
+def test_background_starting_mid_task_is_applied():
+    """A throttle interval that begins mid-task used to be missed entirely
+    (slowdown sampled once at region start)."""
+    m = one_core_machine(tp=1.0, background=[(5.0, 1e9, 0, 2.0)])
+    # 10 base-seconds from t=0: 5s unthrottled, remaining 5 at 2x -> 15s.
+    assert m.task_time(0, "avx2", 10.0, 0.0) == pytest.approx(15.0)
+
+
+def test_background_ending_mid_task_not_over_applied():
+    """An interval that ends mid-task used to throttle the whole task."""
+    m = one_core_machine(tp=1.0, background=[(0.0, 2.0, 0, 3.0)])
+    # 2 wall-seconds at 3x consume 2/3 base; the rest runs unthrottled.
+    assert m.task_time(0, "avx2", 10.0, 0.0) == pytest.approx(
+        2.0 + (10.0 - 2.0 / 3.0))
+
+
+def test_constant_background_matches_point_sample():
+    """An interval covering the whole task reduces to the old behaviour."""
+    m = one_core_machine(tp=1.0, background=[(0.0, 1e9, 0, 3.0)])
+    assert m.task_time(0, "avx2", 10.0, 0.0) == pytest.approx(30.0)
+
+
+def test_virtual_pool_sequential_subtasks_hit_their_own_interval():
+    """The second sub-task of a worker starts at the virtual instant the
+    first finished — a throttle starting between them lands on it."""
+    m = one_core_machine(tp=1.0, background=[(5.0, 1e9, 0, 2.0)])
+    pool = VirtualWorkerPool(m, isa="avx2")
+    times = pool.run([
+        SubTask(worker=0, start=0, size=1, work=5.0),   # t in [0, 5): clean
+        SubTask(worker=0, start=1, size=1, work=5.0),   # starts at 5: 2x
+    ])
+    np.testing.assert_allclose(times[0], 5.0 + 10.0)
+
+
+# --------------------------------------------- dispatch: shard outputs ----
+def test_q4_shards_byte_identical_to_monolithic():
+    x = jnp.asarray(RNG.normal(size=(4, 512)).astype(np.float32))
+    qw = quantize_q4_0(jnp.asarray(RNG.normal(size=(300, 512)).astype(np.float32)))
+    disp = HybridKernelDispatcher.virtual("core-12900k", execute=True)
+    got = disp.q4_matmul(x, qw, blocks=(8, 256, 512))
+    want = ops.q4_matmul(x, qw, blocks=(8, 256, 512), interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_int8_shards_identical_via_thread_pool():
+    a = jnp.asarray(RNG.integers(0, 256, size=(16, 256)), dtype=jnp.uint8)
+    w = jnp.asarray(RNG.integers(-127, 128, size=(200, 256)), dtype=jnp.int8)
+    disp = HybridKernelDispatcher.threaded(4)
+    try:
+        for _ in range(2):  # tuner explores different shard blocks; s32 exact
+            got = disp.int8_gemm(a, w)
+            np.testing.assert_array_equal(
+                np.asarray(got), np.asarray(ref.int8_gemm_ref(a, w)))
+    finally:
+        disp.close()
+
+
+def test_virtual_dispatcher_without_execute_refuses_kernels():
+    disp = HybridKernelDispatcher.virtual("ultra-125h")  # execute=False
+    x = jnp.zeros((1, 64), jnp.float32)
+    qw = quantize_q4_0(jnp.asarray(RNG.normal(size=(32, 64)).astype(np.float32)))
+    with pytest.raises(ValueError, match="execute"):
+        disp.q4_matmul(x, qw)
+
+
+# ------------------------------------- dispatch: the paper's claims -------
+GEMV_SPEC = KernelSpec("q4_gemv", isa=GEMV_ISA, granularity=8,
+                       work_per_unit=4096 * 0.5625)
+
+
+@pytest.mark.parametrize("machine", ["ultra-125h", "core-12900k"])
+def test_dynamic_dispatch_reaches_bandwidth_fraction(machine):
+    """Paper Fig. 2: dynamic shard dispatch sustains >90% of the socket's
+    streaming bandwidth; static (equal shards) stays materially lower."""
+    def frac(dynamic, iters):
+        disp = HybridKernelDispatcher.virtual(machine, dynamic=dynamic)
+        for _ in range(iters):
+            disp.dispatch(GEMV_SPEC, 4096, bytes_per_unit=4096 * 0.5625)
+        tail = disp.stats[-10:]
+        moved = sum(st.bytes for st in tail)
+        busy = sum(st.makespan for st in tail)
+        return (moved / busy) / disp.machine.socket_bandwidth
+
+    dyn, sta = frac(True, 40), frac(False, 10)
+    assert dyn > 0.90, f"{machine}: dynamic achieved {dyn:.2%}"
+    assert dyn > sta + 0.05, f"{machine}: dynamic {dyn:.2%} vs static {sta:.2%}"
+
+
+def test_dispatch_ratios_converge_to_true_throughput():
+    machine = make_machine("ultra-125h")
+    disp = HybridKernelDispatcher.virtual(machine)
+    for _ in range(40):
+        disp.dispatch(GEMV_SPEC, 4096)
+    ratios = disp.table.ratios(GEMV_ISA)
+    tp = machine.true_throughput(GEMV_ISA)
+    np.testing.assert_allclose(ratios, tp / tp.mean(), rtol=0.10)
+
+
+def test_bytes_telemetry_on_region_stats():
+    disp = HybridKernelDispatcher.virtual("ultra-125h")
+    st = disp.dispatch(GEMV_SPEC, 4096, bytes_per_unit=4096 * 0.5625)
+    assert st.bytes == pytest.approx(4096 * 4096 * 0.5625)
+    assert st.bandwidth > 0
+    assert disp.achieved_bandwidth() == pytest.approx(st.bandwidth)
+
+
+# --------------------------------------------------- balanced layers ------
+def test_balanced_quant_linear_matches_reference():
+    w = RNG.normal(size=(96, 64)).astype(np.float32)
+    x = jnp.asarray(RNG.normal(size=(4, 64)).astype(np.float32))
+    disp = HybridKernelDispatcher.virtual("ultra-125h", execute=True)
+    layer = BalancedQuantLinear.from_dense(jnp.asarray(w), disp)
+    got = layer(x, isa=GEMV_ISA)
+    want = ref.q4_matmul_ref(x, quantize_q4_0(jnp.asarray(w)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-2)
+    # 3D hidden states (B, S, d) round-trip through the same dispatch
+    x3 = x.reshape(2, 2, 64)
+    got3 = layer(x3)
+    np.testing.assert_allclose(np.asarray(got3).reshape(4, -1),
+                               np.asarray(got), rtol=1e-6, atol=1e-6)
+
+
+def test_balanced_linear_matches_int8_linear():
+    w = RNG.normal(size=(48, 64)).astype(np.float32)
+    x = jnp.asarray(RNG.normal(size=(5, 64)).astype(np.float32))
+    disp = HybridKernelDispatcher.virtual("core-12900k", execute=True)
+    layer = BalancedLinear.from_dense(jnp.asarray(w), disp)
+    got = layer(x)
+    qa = quantize_u8_dynamic(x)
+    qw = quantize_s8_symmetric(jnp.asarray(w))
+    want = int8_linear(qa, qw, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------- engine hot-path wiring -------
+def test_engine_decodes_through_balanced_head():
+    """ContinuousBatchingEngine + balanced Q4 LM head: requests finish,
+    both per-phase ISA keys are learned from real shard dispatches, and
+    bandwidth accounting accumulates."""
+    from repro.configs import reduced_config
+    from repro.models import balanced_lm_head, init_params
+    from repro.serving import (
+        ContinuousBatchingEngine,
+        HybridPhaseCost,
+        poisson_requests,
+    )
+
+    cfg = reduced_config("granite-8b")
+    params = init_params(cfg, jax.random.key(0))
+    disp = HybridKernelDispatcher.virtual("ultra-125h", execute=True)
+    engine = ContinuousBatchingEngine(
+        cfg, params, max_slots=2, max_seq=16, prefill_chunk=4,
+        cost_model=HybridPhaseCost("ultra-125h"),
+        balanced_head=balanced_lm_head(cfg, params, disp))
+    requests = poisson_requests(3, rate=100.0, vocab_size=cfg.vocab_size,
+                                prompt_len=6, max_new_tokens=4, seed=0)
+    for r in requests:
+        engine.submit(r)
+    engine.run_until_idle()
+    assert all(len(r.generated) == 4 for r in requests)
+    assert sorted(disp.table.keys()) == ["avx_vnni", "membw"]
+    # decode GEMVs moved bytes through the membw-keyed regions
+    assert disp.achieved_bandwidth(GEMV_ISA) > 0
+    spread = disp.table.ratios(GEMV_ISA)
+    assert spread.max() / spread.min() > 1.1  # hybrid cores differentiated

@@ -187,6 +187,28 @@ def test_ratio_store_load_into(tmp_path):
     assert RatioStore(str(tmp_path / "nope.json")).load() is None
 
 
+def test_ratio_store_load_into_rejects_convention_mismatch(tmp_path):
+    """A sum-normalized table silently loaded into a mean-normalized one is
+    off by n_workers and corrupts learned ratios; a different alpha changes
+    the filter the stored history was produced under.  Both must refuse."""
+    src = RatioTable(2, alpha=0.3, normalize="sum")
+    src.update("k", np.array([1.0, 3.0]))
+    store = RatioStore(str(tmp_path / "ratios.json"))
+    store.save(src)
+    # normalize mismatch
+    dst = RatioTable(2, alpha=0.3, normalize="mean")
+    assert not store.load_into(dst)
+    assert dst.keys() == []
+    # alpha mismatch
+    dst = RatioTable(2, alpha=0.5, normalize="sum")
+    assert not store.load_into(dst)
+    assert dst.keys() == []
+    # exact convention match still loads
+    dst = RatioTable(2, alpha=0.3, normalize="sum")
+    assert store.load_into(dst)
+    np.testing.assert_allclose(dst.ratios("k"), src.ratios("k"))
+
+
 def test_warm_start_skips_cold_start_imbalance(tmp_path):
     """The point of persistence: a warm-started run plans proportionally
     from dispatch #1 instead of re-learning the machine."""
