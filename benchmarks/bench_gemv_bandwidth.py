@@ -10,17 +10,34 @@ achieved-bandwidth fraction is read straight off the dispatcher telemetry.
 Paper reference results: +19% bandwidth on Ultra-125H; dynamic reaches >90%
 of the MLC-measured bandwidth where static stays materially lower.
 
+The trunk section extends Fig. 2 from the lone LM-head GEMV to a whole
+llama2-7B decode step: per layer-kind regions (q/k/v/o attention
+projections, MLP up/gate/down, head) each dispatch under their own
+``membw/<kind>`` ratio key, and the reported fraction is over the *sum* of
+the step's byte traffic — the trunk-level achieved-bandwidth fraction the
+serving engine's balanced-trunk mode reproduces end to end.
+
   PYTHONPATH=src python -m benchmarks.bench_gemv_bandwidth [--smoke]
 """
 
 from __future__ import annotations
 
-from repro.kernels import GEMV_ISA, HybridKernelDispatcher
+from repro.kernels import GEMV_ISA, HybridKernelDispatcher, kernel_key
 from repro.runtime import KernelSpec
 
 from .common import GEMV_SHAPE, Q4_BYTES_PER_ELEM, fmt
 
 MACHINES = ("ultra-125h", "core-12900k")
+
+# One llama2-7B decode step's Q4 GEMV regions: (kind, N rows, K cols,
+# calls per step) — d_model 4096, d_ff 11008, vocab 32000, per layer:
+# q/k/v/o + gate/up (mlp_up x2) + down, plus the head once.
+TRUNK_STEP = (
+    ("attn_proj", 4096, 4096, 4),
+    ("mlp_up", 11008, 4096, 2),
+    ("mlp_down", 4096, 11008, 1),
+    ("head", 32000, 4096, 1),
+)
 
 
 def steady_state_dispatch(machine: str, *, dynamic: bool, iters: int = 40,
@@ -41,6 +58,34 @@ def steady_state_dispatch(machine: str, *, dynamic: bool, iters: int = 40,
     return makespan, frac
 
 
+def trunk_steady_state(machine: str, *, dynamic: bool, iters: int = 20,
+                       warmup: int = 8, seed: int = 0):
+    """Whole-decode-step dispatch: every TRUNK_STEP region per iteration,
+    each under its per-kind ``membw/<kind>`` table key; returns
+    (step makespan seconds, trunk achieved-bandwidth fraction) over the
+    post-warmup window."""
+    disp = HybridKernelDispatcher.virtual(machine, seed=seed,
+                                          dynamic=dynamic, keep_stats=False)
+    specs = [
+        (KernelSpec(f"q4_gemv_{kind}", isa=GEMV_ISA, granularity=8,
+                    work_per_unit=k * Q4_BYTES_PER_ELEM,
+                    key=kernel_key(GEMV_ISA, kind)),
+         n, k, calls)
+        for kind, n, k, calls in TRUNK_STEP
+    ]
+    step_seconds = 0.0
+    for i in range(iters):
+        if i == warmup:
+            disp.reset_bandwidth_accounting()
+        step_seconds = 0.0
+        for spec, n, k, calls in specs:
+            for _ in range(calls):
+                st = disp.dispatch(spec, n,
+                                   bytes_per_unit=k * Q4_BYTES_PER_ELEM)
+                step_seconds += st.makespan
+    return step_seconds, disp.achieved_bandwidth_fraction()
+
+
 def _measure(iters: int = 40, tail: int = 10) -> dict:
     """Per machine: (dynamic makespan, dynamic frac, static makespan,
     static frac)."""
@@ -49,6 +94,16 @@ def _measure(iters: int = 40, tail: int = 10) -> dict:
                                          tail=tail),
                   *steady_state_dispatch(machine, dynamic=False, iters=tail,
                                          tail=tail))
+        for machine in MACHINES
+    }
+
+
+def _measure_trunk(iters: int = 20, warmup: int = 8) -> dict:
+    return {
+        machine: (*trunk_steady_state(machine, dynamic=True, iters=iters,
+                                      warmup=warmup),
+                  *trunk_steady_state(machine, dynamic=False, iters=iters,
+                                      warmup=warmup))
         for machine in MACHINES
     }
 
@@ -74,8 +129,29 @@ def _rows(measured: dict) -> list[tuple]:
     return rows
 
 
-def run(iters: int = 40, tail: int = 10) -> list[tuple]:
-    return _rows(_measure(iters, tail))
+def _trunk_rows(measured: dict) -> list[tuple]:
+    step_bytes = sum(n * k * Q4_BYTES_PER_ELEM * calls
+                     for _, n, k, calls in TRUNK_STEP)
+    rows = []
+    for machine, (dyn, dyn_frac, sta, sta_frac) in measured.items():
+        rows.append((
+            f"trunk_step_static_{machine}", fmt(sta),
+            f"gbps={step_bytes / sta / 1e9:.1f}"
+            f"|achieved_bw_frac={sta_frac:.3f}",
+        ))
+        rows.append((
+            f"trunk_step_dynamic_{machine}", fmt(dyn),
+            f"gbps={step_bytes / dyn / 1e9:.1f}"
+            f"|achieved_bw_frac={dyn_frac:.3f}"
+            f"|improvement_pct={(sta - dyn) / dyn * 100:.0f}",
+        ))
+    return rows
+
+
+def run(iters: int = 40, tail: int = 10, trunk_iters: int = 20,
+        trunk_warmup: int = 8) -> list[tuple]:
+    return (_rows(_measure(iters, tail))
+            + _trunk_rows(_measure_trunk(trunk_iters, trunk_warmup)))
 
 
 def main() -> int:
@@ -86,14 +162,22 @@ def main() -> int:
                     help="short deterministic run for CI")
     args = ap.parse_args()
     measured = _measure(iters=16, tail=4) if args.smoke else _measure()
+    trunk = (_measure_trunk(iters=10, warmup=6) if args.smoke
+             else _measure_trunk())
     print("name,us_per_call,derived")
-    for name, us, extra in _rows(measured):
+    for name, us, extra in _rows(measured) + _trunk_rows(trunk):
         print(f"{name},{us:.1f},{extra}")
     for machine, (_, dyn_frac, _, sta_frac) in measured.items():
         print(f"# {machine}: dynamic achieved_bw_frac={dyn_frac:.3f} "
               f"static={sta_frac:.3f}")
         if not dyn_frac > sta_frac:
             print(f"# FAIL: dynamic did not beat static on {machine}")
+            return 1
+    for machine, (_, dyn_frac, _, sta_frac) in trunk.items():
+        print(f"# {machine} trunk: dynamic achieved_bw_frac={dyn_frac:.3f} "
+              f"static={sta_frac:.3f}")
+        if not dyn_frac > sta_frac:
+            print(f"# FAIL: trunk dynamic did not beat static on {machine}")
             return 1
     return 0
 

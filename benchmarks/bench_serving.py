@@ -15,15 +15,28 @@ measured here is purely the *scheduling* policy:
 Deterministic: seeded arrivals, seeded machine jitter, virtual clock.
 Emits TTFT/TPOT percentiles (us_per_call column = TTFT p50) and goodput.
 
-  PYTHONPATH=src python -m benchmarks.bench_serving [--smoke]
+Two extra modes:
+
+* balanced-trunk rows (always emitted): the engine decodes with *every*
+  projection through :class:`repro.kernels.HybridKernelDispatcher` shards
+  (fp32 path — shard-exact), once dynamic and once static; the derived
+  column reports the whole-decode-step achieved-bandwidth fraction over a
+  post-warmup window (paper claim: >=0.90 dynamic vs <=0.85 static).
+* ``--sweep`` — overload study: goodput vs open-loop arrival rate on one
+  machine (monotone non-increasing past saturation).
+
+  PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [--sweep]
 """
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 
 from repro.configs import reduced_config
-from repro.models import init_params
+from repro.kernels import HybridKernelDispatcher
+from repro.models import BalancedTrunk, init_params
 from repro.serving import (
     DECODE,
     PREFILL,
@@ -45,21 +58,44 @@ FULL = dict(n_requests=24, prompt_len=32, steps=16, slots=8, chunk=16,
 SMOKE = dict(n_requests=6, prompt_len=8, steps=4, slots=4, chunk=4,
              rate=100.0)
 
+# Balanced-trunk runs use a widened reduced config: projection N dims must
+# comfortably exceed n_cores x rounding so the achieved-bandwidth fraction
+# measures balance quality, not integer-granularity noise.
+TRUNK = dict(n_requests=8, prompt_len=16, steps=12, slots=4, chunk=8,
+             rate=20.0, warmup_requests=4)
+TRUNK_SMOKE = dict(n_requests=4, prompt_len=8, steps=8, slots=2, chunk=8,
+                   rate=50.0, warmup_requests=3)
+
+# Overload sweep: open-loop arrival rates (req/s) under a fixed request
+# population and a tighter TTFT SLO (the study is about queueing-induced
+# SLO misses, not service latency).  The 4-slot virtual engine saturates
+# near SWEEP_SATURATION req/s; past it goodput is monotone non-increasing
+# (below it the duration denominator dominates, so no claim is made).
+SWEEP = dict(n_requests=12, prompt_len=8, steps=8, slots=4, chunk=8,
+             slo_ttft=1.0)
+SWEEP_SATURATION = 16.0
+SWEEP_RATES = (1.0, 4.0, 16.0, 64.0, 256.0)
+SWEEP_RATES_SMOKE = (16.0, 64.0, 256.0)
+
 # SLOs for goodput: generous multiples of the unloaded virtual latencies.
 SLO_TTFT = 2.0     # seconds
 SLO_TPOT = 0.25    # seconds/token
 
 
-def _traffic(cfg, p, seed=0):
+def _traffic(cfg, p, seed=0, n=None, rate=None):
     return poisson_requests(
-        p["n_requests"], rate=p["rate"], vocab_size=cfg.vocab_size,
+        n or p["n_requests"], rate=rate or p["rate"],
+        vocab_size=cfg.vocab_size,
         prompt_len=p["prompt_len"], max_new_tokens=p["steps"], seed=seed)
 
 
-def run_continuous(machine: str, p, seed: int = 0):
-    """Real engine, virtual clock; returns (report, cost model)."""
-    cfg = reduced_config("granite-8b")
-    params = init_params(cfg, jax.random.key(0))
+def run_continuous(machine: str, p, seed: int = 0, model=None):
+    """Real engine, virtual clock; returns (report, cost model).
+    ``model=(cfg, params)`` reuses prebuilt weights (rate sweeps)."""
+    cfg, params = model or (None, None)
+    if cfg is None:
+        cfg = reduced_config("granite-8b")
+        params = init_params(cfg, jax.random.key(0))
     cost = HybridPhaseCost(machine, seed=seed)
     eng = ContinuousBatchingEngine(
         cfg, params, max_slots=p["slots"],
@@ -70,7 +106,52 @@ def run_continuous(machine: str, p, seed: int = 0):
         eng.submit(r)
     eng.run_until_idle()
     return LatencyReport.from_requests(
-        requests, slo_ttft=SLO_TTFT, slo_tpot=SLO_TPOT), cost
+        requests, slo_ttft=p.get("slo_ttft", SLO_TTFT),
+        slo_tpot=SLO_TPOT), cost
+
+
+def trunk_config():
+    """Reduced granite-8b widened so every projection N is >= a few rows
+    per simulated core (d_model 256, GQA 4:1 -> q/o 256, k/v 64 rows;
+    MLP 512; head 2048)."""
+    return dataclasses.replace(
+        reduced_config("granite-8b"), d_model=256, d_ff=512,
+        vocab_size=2048)
+
+
+def run_balanced_trunk(machine: str, p, *, dynamic: bool, seed: int = 0,
+                       model=None):
+    """Engine with the whole trunk (+head) through balanced fp32 shard
+    dispatch; returns (report, decode achieved-bw fraction measured after a
+    warmup batch converged the per-kind ratio tables, dispatcher)."""
+    cfg, params = model or (None, None)
+    if cfg is None:
+        cfg = trunk_config()
+        params = init_params(cfg, jax.random.key(0))
+    disp = HybridKernelDispatcher.virtual(machine, seed=seed,
+                                          dynamic=dynamic, execute=True,
+                                          keep_stats=False)
+    trunk = BalancedTrunk.from_params(cfg, params, disp, quant="fp32")
+    eng = ContinuousBatchingEngine(
+        cfg, params, max_slots=p["slots"],
+        max_seq=p["prompt_len"] + p["steps"] + 8,
+        prefill_chunk=p["chunk"],
+        cost_model=HybridPhaseCost(machine, seed=seed),
+        balanced_trunk=trunk)
+    warm = _traffic(cfg, p, seed, n=p["warmup_requests"])
+    for r in warm:
+        eng.submit(r)
+    eng.run_until_idle()
+    eng.poll_finished()
+    disp.reset_bandwidth_accounting()  # measure steady state only
+    requests = _traffic(cfg, p, seed + 1)
+    for r in requests:
+        r.arrival_time += eng.now  # arrivals continue from the warm clock
+        eng.submit(r)
+    eng.run_until_idle()
+    report = LatencyReport.from_requests(
+        requests, slo_ttft=SLO_TTFT, slo_tpot=SLO_TPOT)
+    return report, disp.achieved_bandwidth_fraction(), disp
 
 
 def run_barrier(machine: str, p, seed: int = 0):
@@ -127,11 +208,65 @@ def _rows(machine: str, p):
     return rows
 
 
-def run(smoke: bool = False) -> list:
-    p = SMOKE if smoke else FULL
+def _trunk_rows(machine: str, p, model=None) -> list:
+    dyn, dyn_frac, _ = run_balanced_trunk(machine, p, dynamic=True,
+                                          model=model)
+    sta, sta_frac, _ = run_balanced_trunk(machine, p, dynamic=False,
+                                          model=model)
+    return [
+        (f"serving_trunk_dynamic_{machine}", fmt(dyn.ttft[50]),
+         f"decode_bw_frac={dyn_frac:.3f}"
+         f"|tok_s={dyn.throughput:.1f}"
+         f"|goodput={dyn.goodput:.2f}"),
+        (f"serving_trunk_static_{machine}", fmt(sta.ttft[50]),
+         f"decode_bw_frac={sta_frac:.3f}"
+         f"|tok_s={sta.throughput:.1f}"
+         f"|goodput={sta.goodput:.2f}"
+         f"|dynamic_bw_gain_pct={(dyn_frac / max(sta_frac, 1e-9) - 1) * 100:.0f}"),
+    ]
+
+
+def run_sweep(machine: str = "ultra-125h", p=None, rates=SWEEP_RATES,
+              seed: int = 0) -> list:
+    """Goodput-vs-arrival-rate sweep (overload study) under one shared
+    model; returns [(rate, LatencyReport)] in ascending rate order."""
+    p = p or SWEEP
+    cfg = reduced_config("granite-8b")
+    params = init_params(cfg, jax.random.key(0))
+    out = []
+    for rate in sorted(rates):
+        rep, _ = run_continuous(machine, dict(p, rate=rate), seed,
+                                model=(cfg, params))
+        out.append((rate, rep))
+    return out
+
+
+def _sweep_rows(machine: str, p, rates) -> list:
     rows = []
+    for rate, rep in run_sweep(machine, p, rates):
+        rows.append((
+            f"serving_sweep_{machine}_rate{rate:g}", fmt(rep.ttft[50]),
+            f"rate={rate:g}"
+            f"|goodput={rep.goodput:.3f}"
+            f"|tok_s={rep.throughput:.1f}"
+            f"|ttft_p99_ms={rep.ttft[99] * 1e3:.1f}",
+        ))
+    return rows
+
+
+def run(smoke: bool = False, sweep: bool = False) -> list:
+    rows = []
+    if sweep:
+        rates = SWEEP_RATES_SMOKE if smoke else SWEEP_RATES
+        return _sweep_rows("ultra-125h", SWEEP, rates)
+    p = SMOKE if smoke else FULL
     for machine in MACHINES:
         rows += _rows(machine, p)
+    tp = TRUNK_SMOKE if smoke else TRUNK
+    cfg = trunk_config()
+    model = (cfg, init_params(cfg, jax.random.key(0)))
+    for machine in MACHINES:
+        rows += _trunk_rows(machine, tp, model=model)
     return rows
 
 
@@ -141,9 +276,12 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny deterministic run for CI")
+    ap.add_argument("--sweep", action="store_true",
+                    help="goodput-vs-arrival-rate overload sweep instead "
+                         "of the policy comparison")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    for name, us, extra in run(smoke=args.smoke):
+    for name, us, extra in run(smoke=args.smoke, sweep=args.sweep):
         print(f"{name},{us:.1f},{extra}")
     return 0
 

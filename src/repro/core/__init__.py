@@ -18,7 +18,7 @@ from .ratio import (
 )
 from .pool import SubTask, ThreadWorkerPool, VirtualWorkerPool
 from .hybrid_sim import CoreSpec, SimulatedHybridCPU, make_machine, MACHINES
-from .tuner import KernelTuner, shape_class
+from .tuner import KernelTuner, TunerStore, shape_class
 from .pipeline import (
     PipelinePlan,
     plan_stages,
@@ -65,6 +65,7 @@ __all__ = [
     "make_machine",
     "MACHINES",
     "KernelTuner",
+    "TunerStore",
     "shape_class",
     "PipelinePlan",
     "plan_stages",

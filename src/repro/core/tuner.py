@@ -12,12 +12,15 @@ the paper's ratio table, and re-adapting if the environment drifts.
 
 from __future__ import annotations
 
+import json
 import math
+import os
+import tempfile
 import threading
 from dataclasses import dataclass, field
-from typing import Any, Dict, Hashable, Sequence, Tuple
+from typing import Any, Dict, Hashable, Optional, Sequence, Tuple
 
-__all__ = ["KernelTuner", "shape_class"]
+__all__ = ["KernelTuner", "TunerStore", "shape_class"]
 
 
 def shape_class(*dims: int) -> Tuple[int, ...]:
@@ -78,3 +81,100 @@ class KernelTuner:
             if not tab:
                 raise KeyError(f"no measurements for {key!r}")
             return min(tab, key=lambda c: tab[c].ema)
+
+    # -------------------------------------------------------- persistence --
+    def to_json(self) -> str:
+        """Measured entries only (count > 0) as JSON — the block-shape
+        analogue of :meth:`repro.runtime.RatioTable.to_json`, so tuned
+        tables warm-start across processes like ratio tables do."""
+        with self._lock:
+            records = []
+            for key, tab in self._tables.items():
+                configs = [
+                    {"config": _encode(c), "ema": e.ema, "count": e.count}
+                    for c, e in tab.items() if e.count > 0
+                ]
+                if configs:
+                    records.append({"key": _encode(key), "configs": configs})
+        return json.dumps({
+            "version": 1,
+            "alpha": self.alpha,
+            "min_trials": self.min_trials,
+            "tables": records,
+        }, indent=2)
+
+    @classmethod
+    def from_json(cls, text: str, **overrides) -> "KernelTuner":
+        doc = json.loads(text)
+        if doc.get("version") != 1:
+            raise ValueError(f"unknown tuner-table version {doc.get('version')}")
+        kwargs = dict(alpha=doc["alpha"], min_trials=doc["min_trials"])
+        kwargs.update(overrides)
+        tuner = cls(**kwargs)
+        for rec in doc["tables"]:
+            tab = tuner._tables.setdefault(_decode(rec["key"]), {})
+            for c in rec["configs"]:
+                tab[_decode(c["config"])] = _Entry(ema=float(c["ema"]),
+                                                   count=int(c["count"]))
+        return tuner
+
+
+def _encode(obj):
+    """Tuner keys/configs are (nested) tuples of str/int; JSON stores them
+    as (nested) lists."""
+    if isinstance(obj, tuple):
+        return [_encode(o) for o in obj]
+    return obj
+
+
+def _decode(obj):
+    if isinstance(obj, list):
+        return tuple(_decode(o) for o in obj)
+    return obj
+
+
+class TunerStore:
+    """Atomic JSON persistence for a :class:`KernelTuner` at a fixed path
+    (mirrors :class:`repro.runtime.RatioStore`)."""
+
+    def __init__(self, path: str):
+        self.path = path
+
+    def exists(self) -> bool:
+        return os.path.exists(self.path)
+
+    def save(self, tuner: KernelTuner) -> None:
+        """Write-then-rename so a crashed writer never leaves a torn file."""
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(tuner.to_json())
+            os.replace(tmp, self.path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    def load(self, **overrides) -> Optional[KernelTuner]:
+        if not self.exists():
+            return None
+        with open(self.path) as f:
+            return KernelTuner.from_json(f.read(), **overrides)
+
+    def load_into(self, tuner: KernelTuner) -> bool:
+        """Warm-start an existing tuner from the store.  Returns False (and
+        leaves ``tuner`` untouched) when nothing compatible is stored — a
+        different ``alpha`` changes the filter the stored EMAs were
+        produced under and is refused rather than blended (same contract
+        as :meth:`repro.runtime.RatioStore.load_into`)."""
+        stored = self.load()
+        if stored is None or stored.alpha != tuner.alpha:
+            return False
+        with tuner._lock:
+            for key, tab in stored._tables.items():
+                dst = tuner._tables.setdefault(key, {})
+                for c, e in tab.items():
+                    dst[c] = _Entry(ema=e.ema, count=e.count)
+        return True

@@ -7,7 +7,14 @@ runtime applied to these kernels).
 """
 
 from .ops import int8_gemm, int8_linear, q4_matmul, TunedMatmul
-from .dispatch import GEMM_ISA, GEMV_ISA, HybridKernelDispatcher
+from .dispatch import (
+    GEMM_ISA,
+    GEMV_ISA,
+    TRUNK_KINDS,
+    HybridKernelDispatcher,
+    bridged_linear,
+    kernel_key,
+)
 from . import ref
 
 __all__ = [
@@ -19,4 +26,7 @@ __all__ = [
     "HybridKernelDispatcher",
     "GEMM_ISA",
     "GEMV_ISA",
+    "TRUNK_KINDS",
+    "kernel_key",
+    "bridged_linear",
 ]

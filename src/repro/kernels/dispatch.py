@@ -24,18 +24,32 @@ runtime instead splits every GEMM/GEMV along its N dimension into one
 
 Primary-ISA keying follows the paper (kernels sharing a bottleneck share
 ratios): compute-bound prefill GEMMs dispatch under ``"avx_vnni"``,
-memory-bound decode GEMVs under ``"membw"``.  Every region reports its
-bytes moved, so achieved-bandwidth fractions fall out of the uniform
-:class:`~repro.runtime.RegionStats` telemetry.
+memory-bound decode GEMVs under ``"membw"``.  Balanced-trunk callers
+additionally split the *table* key per layer kind — ``kernel_key(isa,
+kind)`` produces ``"membw/attn_proj"``-style keys so every projection
+family converges its own ratio vector while executing under its phase's
+ISA.  Every region reports its bytes moved, so achieved-bandwidth
+fractions fall out of the uniform :class:`~repro.runtime.RegionStats`
+telemetry.
+
+:func:`bridged_linear` is the jit bridge: the model trunk is a jitted
+``lax``-free unrolled loop whose projections must reach these host-side
+shard dispatchers.  Inside a trace it routes the call through an ordered
+``io_callback`` (the sharded per-core Pallas calls stay usable from the
+jitted decode step); outside a trace — or when the caller disallows the
+callback — it falls back to direct eager shard-wise execution.
 """
 
 from __future__ import annotations
 
+import functools
 import time
 from typing import Callable, Dict, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import io_callback
 
 from repro.core.hybrid_sim import SimulatedHybridCPU, make_machine
 from repro.core.pool import SubTask, ThreadWorkerPool, VirtualWorkerPool
@@ -58,10 +72,62 @@ from repro.kernels.int8_gemm import CANDIDATE_BLOCKS as _I8_CANDIDATES
 from repro.kernels.q4_matmul import CANDIDATE_BLOCKS as _Q4_CANDIDATES
 from . import ops
 
-__all__ = ["HybridKernelDispatcher", "GEMM_ISA", "GEMV_ISA"]
+__all__ = ["HybridKernelDispatcher", "GEMM_ISA", "GEMV_ISA",
+           "TRUNK_KINDS", "kernel_key", "bridged_linear"]
 
 GEMM_ISA = "avx_vnni"   # compute-bound prefill GEMM
 GEMV_ISA = "membw"      # memory-bound decode GEMV
+
+# Layer kinds of the balanced trunk: every decode-step projection family
+# gets its own ratio-table key per ISA (q/k/v/o share "attn_proj"; the MLP
+# up/gate projections share "mlp_up"; the down projection and the LM head
+# stand alone).  Kinds sharing a bottleneck could share a table — keeping
+# them separate lets the loop see per-family shape effects (granularity
+# rounding at small N) without polluting the big-GEMV entries.
+TRUNK_KINDS = ("attn_proj", "mlp_up", "mlp_down", "head")
+
+
+def kernel_key(isa: str, kind: Optional[str] = None) -> str:
+    """Ratio-table key for a trunk projection: ``"<isa>/<kind>"`` (or the
+    bare ISA when no kind is given — the PR-3 balanced-head convention)."""
+    return isa if kind is None else f"{isa}/{kind}"
+
+
+def _bridge_run(layer, isa: str, key: Optional[str], x) -> np.ndarray:
+    """Host half of :func:`bridged_linear`: one balanced shard dispatch."""
+    return np.asarray(layer(jnp.asarray(x, jnp.float32), isa=isa, key=key),
+                      dtype=np.float32)
+
+
+def bridged_linear(layer, x: jax.Array, *, isa: str,
+                   key: Optional[str] = None,
+                   allow_callback: bool = True) -> jax.Array:
+    """Apply a host-side balanced linear (``layer(x, isa=, key=)`` with an
+    ``out_features`` attribute) from either side of a jit boundary.
+
+    * Inside a trace: the call becomes an *ordered* ``io_callback`` — the
+      jitted decode step stays one compiled program while every projection
+      still runs as real per-core shards through the dispatcher's worker
+      pools, with shard times fed back to the ratio table in program order.
+    * Outside a trace (or with ``allow_callback=False``, the
+      tracing-disallowed mode): direct eager shard-wise execution.
+
+    Always computes in f32 (the dispatchers' accumulation dtype) and casts
+    back to the caller's dtype.
+    """
+    if isinstance(x, jax.core.Tracer):
+        if not allow_callback:
+            raise RuntimeError(
+                "balanced trunk was built with jit_bridge=False but its "
+                "projections are being traced; run the forward eagerly "
+                "(the engine skips jax.jit for such trunks)")
+        out_shape = jax.ShapeDtypeStruct(x.shape[:-1] + (layer.out_features,),
+                                         jnp.float32)
+        fn = functools.partial(_bridge_run, layer, isa, key)
+        out = io_callback(fn, out_shape, x, ordered=True)
+    else:
+        out = layer(x, isa=isa, key=key)
+    return out.astype(x.dtype)
 
 
 class HybridKernelDispatcher:
@@ -133,10 +199,10 @@ class HybridKernelDispatcher:
         return self._pools[isa]
 
     def _balancer(self, spec: KernelSpec) -> Balancer:
-        key = (spec.isa, spec.granularity)
+        key = (spec.table_key, spec.granularity)
         if key not in self._balancers:
             if self.dynamic:
-                policy = ProportionalPolicy(self.table, key=spec.isa,
+                policy = ProportionalPolicy(self.table, key=spec.table_key,
                                             granularity=spec.granularity)
             else:
                 policy = EvenPolicy(self.n_workers,
@@ -164,7 +230,8 @@ class HybridKernelDispatcher:
         times = self._pool(spec.isa).run(subtasks)
         moved = float(total) * bytes_per_unit
         st = bal.report(plan, times, update=update and self.dynamic,
-                        label=spec.name, bytes_moved=moved)
+                        label=f"{spec.name}@{spec.table_key}",
+                        bytes_moved=moved)
         if moved > 0 and st.makespan > 0:
             self._bytes[spec.isa] = self._bytes.get(spec.isa, 0.0) + moved
             self._busy[spec.isa] = self._busy.get(spec.isa, 0.0) + st.makespan
@@ -173,6 +240,12 @@ class HybridKernelDispatcher:
         return st
 
     # ----------------------------------------------------------- telemetry --
+    def reset_bandwidth_accounting(self) -> None:
+        """Zero the cumulative bytes/busy counters (steady-state windows:
+        warm the ratio tables first, reset, then measure)."""
+        self._bytes.clear()
+        self._busy.clear()
+
     def achieved_bandwidth(self, isa: str = GEMV_ISA) -> float:
         """Bytes/s streamed by this dispatcher's ``isa`` regions so far
         (total bytes moved / total region makespan)."""
@@ -222,12 +295,15 @@ class HybridKernelDispatcher:
         return fn
 
     def q4_matmul(self, x, qw: QuantizedLinear, *, isa: str = GEMV_ISA,
+                  key: Optional[str] = None,
                   blocks: Optional[tuple] = None, granularity: int = 8,
                   update: bool = True):
         """Fp32-Int4-Fp32 ``x (M,K) @ Q4_0 (N,K).T`` as balanced per-core
         N-row shards.  ``isa`` keys the ratio table ("membw" for decode
         GEMV, "avx_vnni" when the same kernel runs compute-bound prefill);
-        the virtual work model follows the bottleneck."""
+        ``key`` optionally refines the table key per layer kind (see
+        :func:`kernel_key`); the virtual work model follows the
+        bottleneck."""
         self._require_executing(isa)
         m, k = x.shape
         n = qw.out_features
@@ -244,12 +320,13 @@ class HybridKernelDispatcher:
         bytes_per_row = k * BYTES_PER_ELEM
         work = bytes_per_row if isa == GEMV_ISA else 2.0 * m * k
         spec = KernelSpec("q4_matmul", isa=isa, granularity=granularity,
-                          work_per_unit=work)
+                          work_per_unit=work, key=key)
         self.dispatch(spec, n, fn, bytes_per_unit=bytes_per_row,
                       update=update)
         return jnp.asarray(out)
 
     def int8_gemm(self, a_u8, w_s8, *, isa: str = GEMM_ISA,
+                  key: Optional[str] = None,
                   blocks: Optional[tuple] = None, granularity: int = 16,
                   update: bool = True):
         """u8 (M,K) x s8 (N,K) -> s32 (M,N) as balanced per-core N-row
@@ -268,6 +345,32 @@ class HybridKernelDispatcher:
                             run_shard, out)
         work = 2.0 * m * k if isa != GEMV_ISA else float(k)
         spec = KernelSpec("int8_gemm", isa=isa, granularity=granularity,
-                          work_per_unit=work)
+                          work_per_unit=work, key=key)
         self.dispatch(spec, n, fn, bytes_per_unit=float(k), update=update)
+        return jnp.asarray(out)
+
+    def f32_matmul(self, x, w, *, isa: str = GEMV_ISA,
+                   key: Optional[str] = None, granularity: int = 1,
+                   update: bool = True):
+        """f32 ``x (M,K) @ W (N,K).T`` as balanced per-core N-row shards of
+        a plain host matmul — no quantization, no block constraints
+        (``granularity=1``), so shard-wise output is exactly the monolithic
+        product.  This is the trunk's precision-reference path: the bytes
+        model streams the f32 weight rows (4K bytes each)."""
+        self._require_executing(isa)
+        x = np.asarray(x, dtype=np.float32)
+        w = np.asarray(w, dtype=np.float32)
+        m, k = x.shape
+        n = w.shape[0]
+        out = np.zeros((m, n), dtype=np.float32)
+
+        def fn(start: int, size: int) -> None:
+            out[:, start:start + size] = x @ w[start:start + size].T
+
+        bytes_per_row = 4.0 * k
+        work = bytes_per_row if isa == GEMV_ISA else 2.0 * m * k
+        spec = KernelSpec("f32_matmul", isa=isa, granularity=granularity,
+                          work_per_unit=work, key=key)
+        self.dispatch(spec, n, fn, bytes_per_unit=bytes_per_row,
+                      update=update)
         return jnp.asarray(out)

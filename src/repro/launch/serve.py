@@ -24,8 +24,14 @@ import numpy as np
 
 from repro.configs import get_config, reduced_config
 from repro.core.hybrid_sim import MACHINES
-from repro.kernels import GEMV_ISA, HybridKernelDispatcher
-from repro.models import balanced_lm_head, init_params
+from repro.core.tuner import KernelTuner, TunerStore
+from repro.kernels import (
+    GEMV_ISA,
+    TRUNK_KINDS,
+    HybridKernelDispatcher,
+    kernel_key,
+)
+from repro.models import BalancedTrunk, balanced_lm_head, init_params
 from repro.runtime import RatioStore, RatioTable
 from repro.serving import (
     DECODE,
@@ -77,7 +83,23 @@ def main() -> int:
                     help="run the LM head as balanced per-core Q4 Pallas "
                          "shards (hybrid kernel dispatch) instead of inside "
                          "the jitted trunk")
+    ap.add_argument("--balanced-trunk", action="store_true",
+                    help="run EVERY trunk projection (q/k/v/o, MLP "
+                         "up/gate/down, head) as balanced per-core shards "
+                         "through the io_callback bridge, with per-phase x "
+                         "per-layer-kind ratio keys")
+    ap.add_argument("--trunk-quant", choices=["q4", "int8", "fp32"],
+                    default="q4",
+                    help="balanced-trunk weight path: Q4_0 Pallas GEMV, "
+                         "dynamic-u8xs8 INT8 GEMM, or shard-exact fp32")
+    ap.add_argument("--tuner-cache", default=None,
+                    help="JSON path to warm-start/persist the kernel "
+                         "tuner's block-shape tables (shared across "
+                         "replicas, like --ratios for ratio tables)")
     args = ap.parse_args()
+    if args.balanced_head and args.balanced_trunk:
+        raise SystemExit("--balanced-trunk already includes the head; "
+                         "drop --balanced-head")
 
     cfg = get_config(args.arch) if args.preset == "full" else reduced_config(args.arch)
     if cfg.embed_input:
@@ -102,21 +124,33 @@ def main() -> int:
 
     chunk = args.prefill_chunk if args.prefill_chunk > 0 else None
     engines, dispatchers = [], []
+    # One kernel tuner shared by every replica dispatcher so a single
+    # --tuner-cache file accumulates all block-shape measurements.
+    tuner = KernelTuner()
+    tuner_store = TunerStore(args.tuner_cache) if args.tuner_cache else None
+    if tuner_store is not None and tuner_store.load_into(tuner):
+        print(f"[serve] warm-started kernel tuner from {args.tuner_cache}")
     for i, n_slots in enumerate(slot_counts):
         cost = (None if args.machine == "wall"
                 else HybridPhaseCost(args.machine, seed=args.seed + i))
-        head = None
-        if args.balanced_head:
-            disp = (HybridKernelDispatcher.threaded(4, keep_stats=False)
+        head, trunk = None, None
+        if args.balanced_head or args.balanced_trunk:
+            disp = (HybridKernelDispatcher.threaded(4, keep_stats=False,
+                                                    tuner=tuner)
                     if args.machine == "wall"
                     else HybridKernelDispatcher.virtual(
                         args.machine, seed=args.seed + i, execute=True,
-                        keep_stats=False))
+                        keep_stats=False, tuner=tuner))
             dispatchers.append(disp)
-            head = balanced_lm_head(cfg, params, disp)
+            if args.balanced_trunk:
+                trunk = BalancedTrunk.from_params(cfg, params, disp,
+                                                  quant=args.trunk_quant)
+            else:
+                head = balanced_lm_head(cfg, params, disp)
         engines.append(ContinuousBatchingEngine(
             cfg, params, max_slots=n_slots, max_seq=max_seq,
-            prefill_chunk=chunk, cost_model=cost, balanced_head=head))
+            prefill_chunk=chunk, cost_model=cost, balanced_head=head,
+            balanced_trunk=trunk))
 
     table = RatioTable(args.replicas, alpha=0.3)
     store = RatioStore(args.ratios) if args.ratios else None
@@ -162,11 +196,24 @@ def main() -> int:
         print(f"[serve] balanced-head kernel table (replica 0): "
               f"membw spread={kt.max() / kt.min():.2f}x "
               f"achieved_bw_frac={d0.achieved_bandwidth_fraction():.2f}")
+    if args.balanced_trunk and args.machine != "wall":
+        d0 = dispatchers[0]
+        for kind in TRUNK_KINDS:
+            key = kernel_key(GEMV_ISA, kind)
+            if key in d0.table.keys():
+                kt = d0.table.ratios(key)
+                print(f"[serve] trunk {key} spread: "
+                      f"{kt.max() / kt.min():.2f}x")
+        print(f"[serve] trunk decode achieved_bw_frac (replica 0): "
+              f"{d0.achieved_bandwidth_fraction():.2f}")
     sample = requests[0].tokens
     print("[serve] sample:", sample[-min(16, args.steps):].tolist())
     if store is not None:
         store.save(table)
         print(f"[serve] saved replica ratios to {args.ratios}")
+    if tuner_store is not None:
+        tuner_store.save(tuner)
+        print(f"[serve] saved kernel tuner tables to {args.tuner_cache}")
     return 0
 
 

@@ -11,9 +11,12 @@ from .transformer import (
     loss_fn,
     ForwardOut,
 )
-from .layers import BalancedLinear, BalancedQuantLinear
+from .layers import BalancedFp32Linear, BalancedLinear, BalancedQuantLinear
+from .balanced import BalancedTrunk
 
 __all__ = [
+    "BalancedTrunk",
+    "BalancedFp32Linear",
     "init_params",
     "abstract_params",
     "init_state",

@@ -95,20 +95,24 @@ def attn_fwd(
     x: jax.Array,
     positions: jax.Array,
     cache: Optional[KVCache] = None,
+    proj: Optional[callable] = None,
 ) -> tuple[jax.Array, Optional[KVCache]]:
     """x: (B, S, d); positions: (B, S) global positions of these tokens.
 
     Without cache: plain causal self-attention (training).
     With cache: appends this chunk's K/V at ``cache.idx`` (prefill writes a
     block, decode writes one token) and attends over everything valid.
+    ``proj(name, x, w)`` overrides each projection matmul (balanced hybrid
+    dispatch of the trunk); default is the in-graph ``x @ w``.
     """
     b, s, d = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     g = hq // hkv
 
-    q = x @ p["wq"]
-    k = x @ p["wk"]
-    v = x @ p["wv"]
+    mm = proj or (lambda name, x, w: x @ w)
+    q = mm("wq", x, p["wq"])
+    k = mm("wk", x, p["wk"])
+    v = mm("wv", x, p["wv"])
     if cfg.qkv_bias:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q = q.reshape(b, s, hq, hd).transpose(0, 2, 1, 3)
@@ -161,4 +165,4 @@ def attn_fwd(
         out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv, g, s, hd)
 
     out = out.reshape(b, hq, s, hd).transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
-    return (out @ p["wo"]).astype(x.dtype), new_cache
+    return mm("wo", out, p["wo"]).astype(x.dtype), new_cache

@@ -1,0 +1,153 @@
+"""Balanced trunk: every projection of the decode step through the paper's
+per-core shard dispatch.
+
+PR 3 put the LM-head GEMV on the :class:`~repro.kernels.dispatch.
+HybridKernelDispatcher`; the rest of the decode step (q/k/v/o attention
+projections, MLP up/gate/down) still executed as monolithic jitted
+matmuls, so the per-ISA ratio loop saw a fraction of the bytes moved per
+token.  :class:`BalancedTrunk` extracts *all* of those weights into
+host-side balanced linears — :class:`~repro.models.layers.
+BalancedQuantLinear` (Q4_0 decode GEMV), :class:`~repro.models.layers.
+BalancedLinear` (dynamic-u8 x s8 INT8 GEMM) or :class:`~repro.models.
+layers.BalancedFp32Linear` (precision reference, shard-exact) — and hands
+the trunk forward a per-layer projection hook that routes each matmul
+through :func:`~repro.kernels.dispatch.bridged_linear`:
+
+* under jit (the engine's compiled decode step) every projection becomes
+  an ordered ``io_callback`` into the dispatcher's worker pools;
+* eagerly (``jit_bridge=False``, the tracing-disallowed fallback) the same
+  layers run direct shard-wise execution.
+
+Table keys are per (ISA x layer kind): ``"membw/attn_proj"``,
+``"avx_vnni/mlp_up"``, ... (see :data:`~repro.kernels.dispatch.
+TRUNK_KINDS`), so each projection family converges its own ratio vector
+per phase while the dispatcher's bytes accounting aggregates the whole
+decode step per ISA — the trunk-level achieved-bandwidth fraction.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.kernels.dispatch import bridged_linear, kernel_key
+
+from .layers import BalancedFp32Linear, BalancedLinear, BalancedQuantLinear
+
+__all__ = ["BalancedTrunk", "QUANT_MODES"]
+
+QUANT_MODES = ("q4", "int8", "fp32")
+
+_LAYER_CLS = {
+    "q4": BalancedQuantLinear,
+    "int8": BalancedLinear,
+    "fp32": BalancedFp32Linear,
+}
+
+# (group, param name) -> ratio-table layer kind
+_KIND = {
+    ("attn", "wq"): "attn_proj",
+    ("attn", "wk"): "attn_proj",
+    ("attn", "wv"): "attn_proj",
+    ("attn", "wo"): "attn_proj",
+    ("ffn", "wi"): "mlp_up",
+    ("ffn", "wg"): "mlp_up",
+    ("ffn", "wo"): "mlp_down",
+}
+
+
+class BalancedTrunk:
+    """Host-side balanced projection bank for a model's whole trunk.
+
+    ``bank[(j, group, name)]`` holds one balanced linear per period repeat
+    for period position ``j`` and parameter ``name`` of ``group`` ("attn"
+    mixer or dense "ffn"); unsupported layers (SSM/xLSTM mixers, MoE ffns)
+    are simply not banked and keep their in-graph matmuls.  ``head`` is the
+    optional balanced LM head (kind ``"head"``).
+    """
+
+    def __init__(self, cfg: ModelConfig, dispatcher, *,
+                 bank: Dict[Tuple[int, str, str], List],
+                 head=None, quant: str = "q4", jit_bridge: bool = True):
+        self.cfg = cfg
+        self.dispatcher = dispatcher
+        self.bank = bank
+        self.head = head
+        self.quant = quant
+        self.jit_bridge = jit_bridge
+
+    # -------------------------------------------------------- construction --
+    @classmethod
+    def from_params(cls, cfg: ModelConfig, params: dict, dispatcher, *,
+                    quant: str = "q4", include_head: bool = True,
+                    jit_bridge: bool = True) -> "BalancedTrunk":
+        """Quantize (or copy, for fp32) every supported trunk projection of
+        ``params`` into dispatcher-bound balanced linears.
+
+        Weights are stored transposed relative to the forward's ``x @ w``
+        convention: a (d_in, d_out) parameter becomes an (N, K) = (d_out,
+        d_in) balanced linear computing ``x @ W.T``.
+        """
+        if quant not in QUANT_MODES:
+            raise ValueError(f"quant must be one of {QUANT_MODES}")
+        layer_cls = _LAYER_CLS[quant]
+        period = cfg.period()
+        bank: Dict[Tuple[int, str, str], List] = {}
+        for j, (mixer, ffn) in enumerate(period):
+            groups = []
+            if mixer == "attn":
+                groups.append(("attn", ("wq", "wk", "wv", "wo")))
+            if ffn == "dense":
+                names = ("wi", "wg", "wo") if cfg.mlp == "swiglu" else ("wi", "wo")
+                groups.append(("ffn", names))
+            for group, names in groups:
+                stack = params["period"][j]["mixer" if group == "attn" else "ffn"]
+                for name in names:
+                    w_stack = stack[name]  # (n_rep, d_in, d_out)
+                    bank[(j, group, name)] = [
+                        layer_cls.from_dense(w_stack[r].T, dispatcher)
+                        for r in range(cfg.n_periods)
+                    ]
+        head = None
+        if include_head:
+            w = (params["embed"]["tok"] if cfg.tie_embeddings
+                 else params["embed"]["out"].T)  # (vocab, d_model)
+            head = layer_cls.from_dense(w, dispatcher)
+        return cls(cfg, dispatcher, bank=bank, head=head, quant=quant,
+                   jit_bridge=jit_bridge)
+
+    # ----------------------------------------------------------- dispatch --
+    def supports(self, j: int, group: str) -> bool:
+        return any(k[0] == j and k[1] == group for k in self.bank)
+
+    def projector(self, j: int, rep: int, group: str,
+                  isa: str) -> Optional[Callable]:
+        """The ``proj(name, x, w)`` hook for one (period position, repeat,
+        group): balanced layers where banked, in-graph matmul otherwise.
+        Returns ``None`` when nothing at this position is banked (the
+        forward then skips hook plumbing entirely)."""
+        if not self.supports(j, group):
+            return None
+
+        def proj(name: str, x: jax.Array, w: jax.Array) -> jax.Array:
+            layers = self.bank.get((j, group, name))
+            if layers is None:
+                return x @ w
+            kind = _KIND[(group, name)]
+            return bridged_linear(layers[rep], x, isa=isa,
+                                  key=kernel_key(isa, kind),
+                                  allow_callback=self.jit_bridge)
+
+        return proj
+
+    def apply_head(self, x: jax.Array, *, isa: str) -> jax.Array:
+        """Balanced LM head with the per-phase ``"<isa>/head"`` table key
+        (host-side call — the engine applies the head outside the jitted
+        trunk)."""
+        if self.head is None:
+            raise ValueError("trunk was built with include_head=False")
+        return bridged_linear(self.head, x, isa=isa,
+                              key=kernel_key(isa, "head"),
+                              allow_callback=self.jit_bridge)

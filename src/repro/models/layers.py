@@ -58,12 +58,16 @@ def init_mlp(cfg: ModelConfig, key) -> dict:
     raise ValueError(cfg.mlp)
 
 
-def mlp_fwd(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+def mlp_fwd(cfg: ModelConfig, p: dict, x: jax.Array,
+            proj: Optional[callable] = None) -> jax.Array:
+    """``proj(name, x, w)`` overrides each projection matmul (balanced
+    hybrid dispatch of the trunk); default is the in-graph ``x @ w``."""
+    mm = proj or (lambda name, x, w: x @ w)
     if cfg.mlp == "swiglu":
-        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+        h = jax.nn.silu(mm("wg", x, p["wg"])) * mm("wi", x, p["wi"])
     else:  # gelu
-        h = jax.nn.gelu(x @ p["wi"])
-    return h @ p["wo"]
+        h = jax.nn.gelu(mm("wi", x, p["wi"]))
+    return mm("wo", h, p["wo"])
 
 
 def init_embedding(cfg: ModelConfig, key) -> dict:
@@ -112,13 +116,14 @@ class BalancedQuantLinear:
     def out_features(self) -> int:
         return self.qw.out_features
 
-    def __call__(self, x: jax.Array, *, isa: str = "membw") -> jax.Array:
+    def __call__(self, x: jax.Array, *, isa: str = "membw",
+                 key: Optional[str] = None) -> jax.Array:
         unflatten = x.ndim == 3
         if unflatten:  # (B, S, d) hidden states -> one (B*S, d) GEMM/GEMV
             b, s, d = x.shape
             x = x.reshape(b * s, d)
         y = self.dispatcher.q4_matmul(x.astype(jnp.float32), self.qw,
-                                      isa=isa)
+                                      isa=isa, key=key)
         return y.reshape(b, s, -1) if unflatten else y
 
 
@@ -142,7 +147,8 @@ class BalancedLinear:
     def out_features(self) -> int:
         return self.w.q.shape[0]
 
-    def __call__(self, x: jax.Array, *, isa: str = "avx_vnni") -> jax.Array:
+    def __call__(self, x: jax.Array, *, isa: str = "avx_vnni",
+                 key: Optional[str] = None) -> jax.Array:
         from repro.quant.int8 import quantize_u8_dynamic, u8s8_matmul_decompose
 
         unflatten = x.ndim == 3
@@ -150,8 +156,39 @@ class BalancedLinear:
             b, s, d = x.shape
             x = x.reshape(b * s, d)
         qa = quantize_u8_dynamic(x.astype(jnp.float32))
-        acc = self.dispatcher.int8_gemm(qa.q, self.w.q, isa=isa)
+        acc = self.dispatcher.int8_gemm(qa.q, self.w.q, isa=isa, key=key)
         y = u8s8_matmul_decompose(qa, self.w, acc)
+        return y.reshape(b, s, -1) if unflatten else y
+
+
+class BalancedFp32Linear:
+    """Full-precision linear sharded per core through the dispatcher's
+    plain host matmul — the trunk's precision-reference path: identical to
+    the monolithic ``x @ W.T`` (N-row shards don't change any output
+    element's reduction), but every call still exercises the ratio-table
+    loop and bytes accounting like the quantized paths."""
+
+    def __init__(self, w, dispatcher):
+        import numpy as np
+
+        self.w = np.asarray(w, dtype=np.float32)  # (N, K)
+        self.dispatcher = dispatcher
+
+    @classmethod
+    def from_dense(cls, w: jax.Array, dispatcher) -> "BalancedFp32Linear":
+        return cls(w, dispatcher)
+
+    @property
+    def out_features(self) -> int:
+        return self.w.shape[0]
+
+    def __call__(self, x: jax.Array, *, isa: str = "membw",
+                 key: Optional[str] = None) -> jax.Array:
+        unflatten = x.ndim == 3
+        if unflatten:
+            b, s, d = x.shape
+            x = x.reshape(b * s, d)
+        y = self.dispatcher.f32_matmul(x, self.w, isa=isa, key=key)
         return y.reshape(b, s, -1) if unflatten else y
 
 

@@ -139,10 +139,12 @@ class ForwardOut(NamedTuple):
     aux: dict
 
 
-def _apply_layer(cfg, mixer, ffn, p, x, positions, state, capacity):
+def _apply_layer(cfg, mixer, ffn, p, x, positions, state, capacity,
+                 proj_attn=None, proj_ffn=None):
     h = norm_fwd(cfg, p["norm1"], x)
     if mixer == "attn":
-        mix, new_state = A.attn_fwd(cfg, p["mixer"], h, positions, state)
+        mix, new_state = A.attn_fwd(cfg, p["mixer"], h, positions, state,
+                                    proj=proj_attn)
     elif mixer == "mamba":
         mix, new_state = S.mamba_fwd(cfg, p["mixer"], h, state)
     elif mixer == "mlstm":
@@ -158,7 +160,7 @@ def _apply_layer(cfg, mixer, ffn, p, x, positions, state, capacity):
         if ffn == "moe":
             y, aux = M.moe_fwd(cfg, p["ffn"], h2, capacity)
         else:
-            y = mlp_fwd(cfg, p["ffn"], h2)
+            y = mlp_fwd(cfg, p["ffn"], h2, proj=proj_ffn)
         x = x + y
     return x, new_state, aux
 
@@ -176,6 +178,8 @@ def forward(
     logits_mode: str = "all",
     apply_head: bool = True,
     remat: bool = False,
+    trunk=None,
+    trunk_isa: str = "membw",
 ) -> ForwardOut:
     """Trunk forward.
 
@@ -185,6 +189,14 @@ def forward(
     ``apply_head=False`` skips the LM-head matmul and returns the final-
     normed hidden states in the ``logits`` slot — for callers that run the
     head outside the jitted trunk (balanced hybrid kernel dispatch).
+
+    ``trunk`` (a :class:`~repro.models.balanced.BalancedTrunk`) reroutes
+    every supported projection through balanced per-core shard dispatch
+    under the ``trunk_isa`` execution ISA (the caller's phase: "membw"
+    decode / "avx_vnni" prefill).  The period loop is then unrolled in
+    Python instead of ``lax.scan`` — each (position, repeat) needs its own
+    host-side weight bank, whether the callbacks are traced into a jitted
+    step or executed eagerly.
     """
     if embeds is not None:
         x = embeds.astype(cfg.cdtype)
@@ -206,28 +218,56 @@ def forward(
     have_state = state is not None
     moe_cfg = cfg.moe
 
-    def period_body(carry, xs):
-        x, lb, dropped = carry
-        p_stack, st_stack = xs
-        new_states = []
-        for j, (mixer, ffn) in enumerate(period):
-            st_j = st_stack[j] if have_state else None
-            x, new_st, aux = _apply_layer(
-                cfg, mixer, ffn, p_stack[j], x, positions, st_j, capacity
-            )
-            # anchor sharding propagation inside the while body (GSPMD does
-            # not reliably propagate through scan+remat)
-            x = constrain(x, ("dp", None, None))
-            new_states.append(new_st if have_state else st_j)
-            if aux is not None:
-                lb = lb + aux["lb_loss"]
-                dropped = dropped + aux["dropped"]
-        return (x, lb, dropped), (new_states if have_state else 0)
+    if trunk is not None:
+        # Balanced-trunk path: unrolled Python loop over period repeats so
+        # each (position, repeat) projection reaches its own host-side
+        # balanced layer (static at trace time — the io_callback bridge
+        # closes over the concrete weight bank).
+        lb = jnp.zeros((), jnp.float32)
+        dropped = jnp.zeros((), jnp.float32)
+        per_pos_states: list = [[] for _ in period]
+        for r in range(cfg.n_periods):
+            for j, (mixer, ffn) in enumerate(period):
+                p_j = jax.tree.map(lambda a, r=r: a[r], params["period"][j])
+                st_j = (jax.tree.map(lambda s, r=r: s[r], state[j])
+                        if have_state else None)
+                x, new_st, aux = _apply_layer(
+                    cfg, mixer, ffn, p_j, x, positions, st_j, capacity,
+                    proj_attn=trunk.projector(j, r, "attn", trunk_isa),
+                    proj_ffn=trunk.projector(j, r, "ffn", trunk_isa),
+                )
+                x = constrain(x, ("dp", None, None))
+                if have_state:
+                    per_pos_states[j].append(new_st)
+                if aux is not None:
+                    lb = lb + aux["lb_loss"]
+                    dropped = dropped + aux["dropped"]
+        new_state = ([jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+                      for reps in per_pos_states] if have_state else 0)
+    else:
+        def period_body(carry, xs):
+            x, lb, dropped = carry
+            p_stack, st_stack = xs
+            new_states = []
+            for j, (mixer, ffn) in enumerate(period):
+                st_j = st_stack[j] if have_state else None
+                x, new_st, aux = _apply_layer(
+                    cfg, mixer, ffn, p_stack[j], x, positions, st_j, capacity
+                )
+                # anchor sharding propagation inside the while body (GSPMD
+                # does not reliably propagate through scan+remat)
+                x = constrain(x, ("dp", None, None))
+                new_states.append(new_st if have_state else st_j)
+                if aux is not None:
+                    lb = lb + aux["lb_loss"]
+                    dropped = dropped + aux["dropped"]
+            return (x, lb, dropped), (new_states if have_state else 0)
 
-    carry0 = (x, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
-    xs = (params["period"], state if have_state else jnp.zeros((cfg.n_periods,)))
-    body = jax.checkpoint(period_body) if remat else period_body
-    (x, lb, dropped), new_state = jax.lax.scan(body, carry0, xs)
+        carry0 = (x, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+        xs = (params["period"],
+              state if have_state else jnp.zeros((cfg.n_periods,)))
+        body = jax.checkpoint(period_body) if remat else period_body
+        (x, lb, dropped), new_state = jax.lax.scan(body, carry0, xs)
 
     if logits_mode == "last":
         # Serving prefill: only the last position's logits are consumed;

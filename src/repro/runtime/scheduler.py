@@ -32,12 +32,21 @@ class KernelSpec:
 
     ``work_per_unit`` converts one unit of the parallel dimension into
     abstract work (FLOPs / bytes) — used only by the virtual-time pool.
+    ``key`` optionally separates the ratio-table key from the execution
+    ISA: balanced-trunk dispatch learns one table per (ISA, layer kind)
+    — e.g. ``"membw/attn_proj"`` — while the pool/machine still executes
+    under the plain ISA.
     """
 
     name: str
     isa: str  # primary ISA, e.g. "avx_vnni", "avx2", "membw"
     granularity: int = 1  # tile size along the parallel dim
     work_per_unit: float = 1.0
+    key: Optional[str] = None  # ratio-table key override (defaults to isa)
+
+    @property
+    def table_key(self) -> str:
+        return self.key if self.key is not None else self.isa
 
 
 class CPURuntime(RatioTable):
@@ -72,7 +81,7 @@ class _PooledScheduler:
         raise NotImplementedError
 
     def balancer(self, kernel: KernelSpec) -> Balancer:
-        key = (kernel.isa, kernel.granularity)
+        key = (kernel.table_key, kernel.granularity)
         if key not in self._balancers:
             self._balancers[key] = Balancer(self._policy(kernel),
                                             sink=self.sink,
@@ -108,7 +117,7 @@ class DynamicScheduler(_PooledScheduler):
         self.runtime = runtime
 
     def _policy(self, kernel: KernelSpec) -> ProportionalPolicy:
-        return ProportionalPolicy(self.runtime, key=kernel.isa,
+        return ProportionalPolicy(self.runtime, key=kernel.table_key,
                                   granularity=kernel.granularity)
 
 

@@ -30,6 +30,8 @@ from .phases import (
     PhaseCostModel,
     PHASE_ISA,
     PREFILL,
+    TRUNK_KINDS,
+    phase_kernel_key,
 )
 from .metrics import LatencyReport, percentiles
 from .request import FinishReason, Request, RequestState
@@ -56,6 +58,8 @@ __all__ = [
     "PREFILL",
     "DECODE",
     "PHASE_ISA",
+    "TRUNK_KINDS",
+    "phase_kernel_key",
     "PhaseCostModel",
     "HybridPhaseCost",
     "LinearPhaseCost",

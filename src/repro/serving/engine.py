@@ -42,7 +42,7 @@ from repro.runtime import (
     clamp_to_capacity,
 )
 
-from .phases import DECODE, PHASE_ISA, PREFILL
+from .phases import DECODE, PHASE_ISA, PREFILL, phase_kernel_key
 from .request import FinishReason, Request, RequestState
 from .scheduler import IterationScheduler, IterationStats
 from .slots import SlotCacheManager
@@ -149,7 +149,8 @@ class ContinuousBatchingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int,
                  max_seq: int, prefill_chunk: Optional[int] = None,
                  sampler: Optional[Callable] = None, cost_model=None,
-                 balanced_head=None, donate_state: bool = True):
+                 balanced_head=None, balanced_trunk=None,
+                 donate_state: bool = True):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -158,9 +159,22 @@ class ContinuousBatchingEngine:
         # Optional hybrid kernel dispatch of the LM head (see
         # models.balanced_lm_head): the jitted trunk stops before the head
         # and the decode-step Fp32-Int4-Fp32 GEMV runs as balanced per-core
-        # Pallas shards with per-phase ISA table keys.
+        # Pallas shards with per-phase ISA table keys.  ``balanced_trunk``
+        # (a models.BalancedTrunk) extends the same loop to *every*
+        # projection of the step — q/k/v/o and MLP up/gate/down run as
+        # per-core shards through the io_callback bridge (or eagerly when
+        # the trunk disallows tracing), under (phase ISA x layer kind)
+        # table keys; its optional head replaces ``balanced_head``.
+        if balanced_head is not None and balanced_trunk is not None \
+                and balanced_trunk.head is not None:
+            raise ValueError(
+                "pass either balanced_head or a balanced_trunk with a head, "
+                "not both")
+        self.balanced_trunk = balanced_trunk
         self.balanced_head = balanced_head
-        apply_head = balanced_head is None
+        apply_head = (balanced_head is None
+                      and (balanced_trunk is None
+                           or balanced_trunk.head is None))
         self.manager = SlotCacheManager(cfg, max_slots, max_seq)
         self.scheduler = IterationScheduler(prefill_chunk)
         self.now = 0.0
@@ -175,28 +189,41 @@ class ContinuousBatchingEngine:
         # (B,) greedy rows by default; a sampler sees (B, V) logits.
         self._pick = sampler or (lambda lg: jnp.argmax(lg, -1))
 
-        @jax.jit
+        trunk = balanced_trunk
+        # Tracing-disallowed fallback: a trunk built with jit_bridge=False
+        # runs its shard dispatches eagerly, so the step functions must
+        # not be jitted (the io_callback bridge would otherwise trace).
+        use_jit = trunk is None or trunk.jit_bridge
+
         def _prefill(params, tokens, state, offset):
             out = forward(cfg, params, tokens, state=state, pos_offset=offset,
-                          logits_mode="last", apply_head=apply_head)
+                          logits_mode="last", apply_head=apply_head,
+                          trunk=trunk, trunk_isa=PHASE_ISA[PREFILL])
             return out.logits[:, -1, :], out.state
 
-        donate = (2,) if donate_state else ()
+        donate = (2,) if donate_state and use_jit else ()
 
-        @functools.partial(jax.jit, donate_argnums=donate)
         def _decode(params, tok, state, pos):
             out = forward(cfg, params, tok, state=state, pos_offset=pos,
-                          apply_head=apply_head)
+                          apply_head=apply_head,
+                          trunk=trunk, trunk_isa=PHASE_ISA[DECODE])
             return out.logits[:, -1, :], out.state
+
+        if use_jit:
+            _prefill = jax.jit(_prefill)
+            _decode = functools.partial(jax.jit, donate_argnums=donate)(_decode)
 
         self._prefill = _prefill
         self._decode = _decode
 
     def _head(self, hidden: jax.Array, phase: str) -> jax.Array:
         """Apply the (possibly balanced) LM head to (B, d) hidden states."""
-        if self.balanced_head is None:
-            return hidden  # jitted trunk already produced logits
-        return self.balanced_head(hidden, isa=PHASE_ISA[phase])
+        if self.balanced_head is not None:
+            return self.balanced_head(hidden, isa=PHASE_ISA[phase])
+        if self.balanced_trunk is not None and self.balanced_trunk.head is not None:
+            return self.balanced_trunk.apply_head(
+                hidden, isa=PHASE_ISA[phase])
+        return hidden  # jitted trunk already produced logits
 
     # ------------------------------------------------------------- intake --
     def submit(self, request: Request) -> int:

@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.core.hybrid_sim import SimulatedHybridCPU, make_machine
 from repro.core.pool import VirtualWorkerPool
+from repro.kernels import dispatch as _kernel
 from repro.runtime import (
     Balancer,
     ProportionalPolicy,
@@ -36,8 +37,9 @@ from repro.runtime import (
     run_plan,
 )
 
-__all__ = ["PREFILL", "DECODE", "PHASES", "PHASE_ISA", "PhaseCostModel",
-           "HybridPhaseCost", "LinearPhaseCost", "phase_balancers"]
+__all__ = ["PREFILL", "DECODE", "PHASES", "PHASE_ISA", "TRUNK_KINDS",
+           "phase_kernel_key", "PhaseCostModel", "HybridPhaseCost",
+           "LinearPhaseCost", "phase_balancers"]
 
 PREFILL = "prefill"
 DECODE = "decode"
@@ -49,6 +51,18 @@ PHASES = (PREFILL, DECODE)
 # :class:`~repro.models.layers.BalancedQuantLinear` head) keys its per-core
 # ratio table with this map.
 PHASE_ISA = {PREFILL: "avx_vnni", DECODE: "membw"}
+
+# Balanced-trunk dispatch refines the keying to (phase ISA x layer kind):
+# every projection family of the decode step owns a ratio vector per phase
+# — "membw/attn_proj", "avx_vnni/mlp_up", ... (see repro.kernels.dispatch).
+TRUNK_KINDS = _kernel.TRUNK_KINDS
+
+
+def phase_kernel_key(phase: str, kind: Optional[str] = None) -> str:
+    """Ratio-table key for a trunk projection in ``phase``:
+    ``"<phase isa>/<kind>"`` (bare phase ISA when ``kind`` is None — the
+    PR-3 balanced-head convention)."""
+    return _kernel.kernel_key(PHASE_ISA[phase], kind)
 
 
 def phase_balancers(table: RatioTable, sink: Optional[StatsSink] = None):

@@ -6,6 +6,12 @@ over the task's own time span — and the dispatch layer's contracts: shard
 outputs identical to the monolithic kernels, ratio convergence and
 achieved-bandwidth fractions on the simulated hybrid machines, and the
 balanced model-layer wrappers.
+
+PR-4 additions: the balanced *trunk* — shard-vs-monolithic identity for
+every projection kind (q/k/v/o, up/gate/down, head) across quantized and
+fp32 paths, odd N / N < n_cores / single-core edge cases, the io_callback
+jit bridge vs its eager fallback, and the engine's ``balanced_trunk``
+end-to-end wiring.
 """
 
 import numpy as np
@@ -18,11 +24,17 @@ from repro.core.pool import SubTask, ThreadWorkerPool, VirtualWorkerPool
 from repro.kernels import (
     GEMV_ISA,
     HybridKernelDispatcher,
+    bridged_linear,
     int8_linear,
+    kernel_key,
     ops,
     ref,
 )
-from repro.models.layers import BalancedLinear, BalancedQuantLinear
+from repro.models.layers import (
+    BalancedFp32Linear,
+    BalancedLinear,
+    BalancedQuantLinear,
+)
 from repro.quant import (
     quantize_q4_0,
     quantize_s8_symmetric,
@@ -32,6 +44,8 @@ from repro.runtime import KernelSpec
 
 RNG = np.random.default_rng(0)
 
+ALL_ISAS = {"avx_vnni": 100e9, "avx2": 50e9, "membw": 8e9}
+
 
 def one_core_machine(tp: float = 1.0, background=()):
     """Deterministic single-core machine: jitter 0, throughput ``tp``."""
@@ -39,6 +53,12 @@ def one_core_machine(tp: float = 1.0, background=()):
         cores=[CoreSpec("C0", "P", {"avx2": tp}, jitter=0.0)])
     m.background.extend(background)
     return m
+
+
+def single_core_all_isas():
+    """One core with every dispatch ISA (single-core edge cases)."""
+    return SimulatedHybridCPU(
+        cores=[CoreSpec("C0", "P", dict(ALL_ISAS), jitter=0.0)])
 
 
 # ------------------------------------------------- pool: multi-subtask ----
@@ -226,6 +246,144 @@ def test_balanced_linear_matches_int8_linear():
                                rtol=1e-6, atol=1e-6)
 
 
+# ------------------------------------------ balanced trunk: identity ------
+# Every trunk projection kind across quantized and fp32 paths, including
+# odd N, N < n_cores, and a single-core machine.  Sharding is along N, so
+# each output element's reduction is untouched: fp32 and int8 (s32
+# accumulate) are exact; q4 is allclose to the dequantize-reference.
+EDGE_SHAPES = [(101, 64), (5, 64), (300, 128)]  # odd / < n_cores / even
+
+
+def _edge_dispatchers():
+    return [
+        HybridKernelDispatcher.virtual(make_machine("ultra-125h"),
+                                       execute=True),
+        HybridKernelDispatcher.virtual(single_core_all_isas(), execute=True),
+    ]
+
+
+@pytest.mark.parametrize("n,k", EDGE_SHAPES)
+def test_balanced_fp32_linear_shard_exact(n, k):
+    w = RNG.normal(size=(n, k)).astype(np.float32)
+    x = jnp.asarray(RNG.normal(size=(3, k)).astype(np.float32))
+    for disp in _edge_dispatchers():
+        layer = BalancedFp32Linear.from_dense(w, disp)
+        got = np.asarray(layer(x))
+        np.testing.assert_allclose(got, np.asarray(x) @ w.T,
+                                   rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("n,k", EDGE_SHAPES)
+def test_balanced_quant_linear_edge_shapes(n, k):
+    w = RNG.normal(size=(n, k)).astype(np.float32)
+    x = jnp.asarray(RNG.normal(size=(2, k)).astype(np.float32))
+    want = np.asarray(ref.q4_matmul_ref(x, quantize_q4_0(jnp.asarray(w))))
+    for disp in _edge_dispatchers():
+        layer = BalancedQuantLinear.from_dense(jnp.asarray(w), disp)
+        got = np.asarray(layer(x, isa=GEMV_ISA, key="membw/attn_proj"))
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-2)
+
+
+@pytest.mark.parametrize("n,k", EDGE_SHAPES)
+def test_balanced_int8_linear_edge_shapes(n, k):
+    w = RNG.normal(size=(n, k)).astype(np.float32)
+    x = jnp.asarray(RNG.normal(size=(2, k)).astype(np.float32))
+    want = np.asarray(int8_linear(quantize_u8_dynamic(x),
+                                  quantize_s8_symmetric(jnp.asarray(w)),
+                                  interpret=True))
+    for disp in _edge_dispatchers():
+        layer = BalancedLinear.from_dense(jnp.asarray(w), disp)
+        got = np.asarray(layer(x, key="avx_vnni/mlp_up"))
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def _trunk_fixture(quant):
+    from repro.configs import reduced_config
+    from repro.models import BalancedTrunk, init_params
+
+    cfg = reduced_config("granite-8b")
+    params = init_params(cfg, jax.random.key(0))
+    disp = HybridKernelDispatcher.virtual("ultra-125h", execute=True)
+    trunk = BalancedTrunk.from_params(cfg, params, disp, quant=quant)
+    return cfg, params, disp, trunk
+
+
+@pytest.mark.parametrize("quant", ["q4", "int8", "fp32"])
+def test_trunk_projections_match_monolithic(quant):
+    """Every banked projection (wq/wk/wv/wo, wi/wg/wo, head) matches the
+    monolithic execution of the same quantized weight."""
+    cfg, params, disp, trunk = _trunk_fixture(quant)
+    names = {(g, n) for (_, g, n) in trunk.bank}
+    assert names == {("attn", "wq"), ("attn", "wk"), ("attn", "wv"),
+                     ("attn", "wo"), ("ffn", "wi"), ("ffn", "wg"),
+                     ("ffn", "wo")}
+    x = jnp.asarray(RNG.normal(size=(3, cfg.d_model)).astype(np.float32))
+    for (j, group, name), layers in trunk.bank.items():
+        for r, layer in enumerate(layers):
+            w = np.asarray(
+                params["period"][j]["mixer" if group == "attn" else "ffn"]
+                [name][r]).T  # (N, K)
+            xin = x if w.shape[1] == cfg.d_model else jnp.asarray(
+                RNG.normal(size=(3, w.shape[1])).astype(np.float32))
+            got = np.asarray(layer(xin, isa=GEMV_ISA))
+            if quant == "fp32":
+                want = np.asarray(xin) @ w.T
+                tol = dict(rtol=1e-6, atol=1e-6)
+            elif quant == "q4":
+                want = np.asarray(
+                    ref.q4_matmul_ref(xin, quantize_q4_0(jnp.asarray(w))))
+                tol = dict(rtol=2e-5, atol=1e-2)
+            else:
+                want = np.asarray(int8_linear(
+                    quantize_u8_dynamic(xin),
+                    quantize_s8_symmetric(jnp.asarray(w)), interpret=True))
+                tol = dict(rtol=1e-6, atol=1e-6)
+            np.testing.assert_allclose(got, want, **tol)
+    # the head is banked too (kind "head")
+    assert trunk.head is not None
+
+
+def test_trunk_forward_allclose_to_monolithic_forward():
+    """Acceptance: fp32 balanced-trunk decode-step outputs allclose to the
+    plain jitted forward — eagerly and through the jitted io_callback
+    bridge, with and without state."""
+    from repro.models import forward, init_state
+
+    cfg, params, disp, trunk = _trunk_fixture("fp32")
+    tok = jnp.asarray(RNG.integers(0, cfg.vocab_size, size=(2, 6)),
+                      dtype=jnp.int32)
+    ref_out = forward(cfg, params, tok)
+    got = forward(cfg, params, tok, trunk=trunk, trunk_isa="membw")
+    np.testing.assert_allclose(np.asarray(got.logits),
+                               np.asarray(ref_out.logits),
+                               rtol=1e-4, atol=1e-4)
+
+    state = init_state(cfg, 2, 16)
+    f = jax.jit(lambda p, t, s: forward(cfg, p, t, state=s, trunk=trunk,
+                                        trunk_isa="membw"))
+    jit_out = f(params, tok, state)
+    ref_state = forward(cfg, params, tok, state=init_state(cfg, 2, 16))
+    np.testing.assert_allclose(np.asarray(jit_out.logits),
+                               np.asarray(ref_state.logits),
+                               rtol=1e-4, atol=1e-4)
+    # per-kind decode keys were learned by the jitted pass
+    assert {"membw/attn_proj", "membw/mlp_up",
+            "membw/mlp_down"} <= set(disp.table.keys())
+
+
+def test_bridge_refuses_tracing_when_disallowed():
+    disp = HybridKernelDispatcher.virtual("ultra-125h", execute=True)
+    layer = BalancedFp32Linear.from_dense(
+        RNG.normal(size=(8, 16)).astype(np.float32), disp)
+    x = jnp.zeros((2, 16), jnp.float32)
+    with pytest.raises(RuntimeError, match="jit_bridge"):
+        jax.jit(lambda x: bridged_linear(layer, x, isa=GEMV_ISA,
+                                         allow_callback=False))(x)
+    # eager call works regardless
+    out = bridged_linear(layer, x, isa=GEMV_ISA, allow_callback=False)
+    assert out.shape == (2, 8)
+
+
 # ------------------------------------------- engine hot-path wiring -------
 def test_engine_decodes_through_balanced_head():
     """ContinuousBatchingEngine + balanced Q4 LM head: requests finish,
@@ -257,3 +415,56 @@ def test_engine_decodes_through_balanced_head():
     assert disp.achieved_bandwidth(GEMV_ISA) > 0
     spread = disp.table.ratios(GEMV_ISA)
     assert spread.max() / spread.min() > 1.1  # hybrid cores differentiated
+
+
+def _run_trunk_engine(quant, jit_bridge, n_requests=3, steps=4):
+    from repro.configs import reduced_config
+    from repro.models import BalancedTrunk, init_params
+    from repro.serving import (
+        ContinuousBatchingEngine,
+        HybridPhaseCost,
+        poisson_requests,
+    )
+
+    cfg = reduced_config("granite-8b")
+    params = init_params(cfg, jax.random.key(0))
+    disp = HybridKernelDispatcher.virtual("ultra-125h", execute=True)
+    trunk = BalancedTrunk.from_params(cfg, params, disp, quant=quant,
+                                      jit_bridge=jit_bridge)
+    engine = ContinuousBatchingEngine(
+        cfg, params, max_slots=2, max_seq=16, prefill_chunk=4,
+        cost_model=HybridPhaseCost("ultra-125h"), balanced_trunk=trunk)
+    requests = poisson_requests(n_requests, rate=100.0,
+                                vocab_size=cfg.vocab_size,
+                                prompt_len=6, max_new_tokens=steps, seed=0)
+    for r in requests:
+        engine.submit(r)
+    engine.run_until_idle()
+    return requests, disp
+
+
+def test_engine_decodes_through_balanced_trunk():
+    """Whole-trunk balanced dispatch on the engine hot path: requests
+    finish, every (phase ISA x layer kind) table key is learned, and the
+    decode-phase bytes accounting covers the whole step (attn + MLP + head
+    traffic, far more than the head alone)."""
+    requests, disp = _run_trunk_engine("q4", jit_bridge=True)
+    assert all(len(r.generated) == 4 for r in requests)
+    kinds = ("attn_proj", "mlp_up", "mlp_down", "head")
+    expect = {kernel_key(isa, kind)
+              for isa in ("avx_vnni", "membw") for kind in kinds}
+    assert expect <= set(disp.table.keys())
+    assert disp.achieved_bandwidth(GEMV_ISA) > 0
+    # decode step bytes: trunk projections + head vs head alone — granite
+    # reduced moves ~3.4x the head's bytes per step through the trunk
+    head_bytes_per_step = 512 * 64 * 0.5625
+    assert disp._bytes[GEMV_ISA] > 2 * head_bytes_per_step
+
+
+def test_trunk_eager_fallback_matches_jit_bridge():
+    """jit_bridge=False runs the same trunk eagerly (tracing disallowed);
+    fp32 shard dispatch is exact, so generated tokens must be identical."""
+    jit_reqs, _ = _run_trunk_engine("fp32", jit_bridge=True)
+    eager_reqs, _ = _run_trunk_engine("fp32", jit_bridge=False)
+    for a, b in zip(jit_reqs, eager_reqs):
+        assert a.generated == b.generated

@@ -313,3 +313,118 @@ def test_planners_are_balance_policies():
     bal = Balancer(planner)
     st = bal.report(plan, np.array([1.0, 2.0]))
     assert st.ratios is not None
+
+
+# ------------------------------------------------- table key separation ---
+def test_kernel_spec_table_key_defaults_to_isa():
+    from repro.runtime import KernelSpec
+
+    assert KernelSpec("k", isa="membw").table_key == "membw"
+    spec = KernelSpec("k", isa="membw", key="membw/attn_proj")
+    assert spec.table_key == "membw/attn_proj"
+    assert spec.isa == "membw"
+
+
+# ----------------------------------------- RatioTable property tests ------
+def test_ratio_table_normalization_property():
+    """Under any all-valid update sequence the table's mean (normalize=
+    'mean') / sum (normalize='sum') follows the exact EMA contraction
+    toward 1 — mean-normalized tables stay at mean 1 forever."""
+    pytest.importorskip("hypothesis", reason="property test needs the dev extra")
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.integers(min_value=2, max_value=8),
+           st.floats(min_value=0.0, max_value=1.0),
+           st.data())
+    @settings(max_examples=40, deadline=None)
+    def check(n, alpha, data):
+        times_vec = st.lists(
+            st.floats(min_value=1e-3, max_value=1e3,
+                      allow_nan=False, allow_infinity=False),
+            min_size=n, max_size=n)
+        rounds = data.draw(st.lists(times_vec, min_size=1, max_size=6))
+        for normalize in ("mean", "sum"):
+            table = RatioTable(n, alpha=alpha, normalize=normalize)
+            agg = np.mean if normalize == "mean" else np.sum
+            prev = agg(table.ratios("k"))
+            for times in rounds:
+                table.update("k", np.asarray(times))
+                cur = agg(table.ratios("k"))
+                np.testing.assert_allclose(
+                    cur, alpha * prev + (1 - alpha), rtol=1e-9)
+                prev = cur
+
+    check()
+
+
+def test_ratio_table_ema_bounded_by_observed_extremes():
+    """Every EMA step is a convex combination: each entry stays inside
+    [min(old, observed), max(old, observed)] — so the table is globally
+    bounded by the initial value and the observation extremes."""
+    pytest.importorskip("hypothesis", reason="property test needs the dev extra")
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.integers(min_value=1, max_value=8),
+           st.floats(min_value=0.0, max_value=1.0),
+           st.data())
+    @settings(max_examples=40, deadline=None)
+    def check(n, alpha, data):
+        obs_vec = st.lists(
+            st.floats(min_value=1e-6, max_value=1e6,
+                      allow_nan=False, allow_infinity=False),
+            min_size=n, max_size=n)
+        rounds = data.draw(st.lists(obs_vec, min_size=1, max_size=6))
+        table = RatioTable(n, alpha=alpha)
+        lo = np.full(n, 1.0)
+        hi = np.full(n, 1.0)
+        for obs in rounds:
+            obs = np.asarray(obs)
+            old = table.ratios("k").copy()
+            new = table.observe("k", obs)
+            assert np.all(new >= np.minimum(old, obs) - 1e-12)
+            assert np.all(new <= np.maximum(old, obs) + 1e-12)
+            lo, hi = np.minimum(lo, obs), np.maximum(hi, obs)
+        assert np.all(table.ratios("k") >= lo - 1e-12)
+        assert np.all(table.ratios("k") <= hi + 1e-12)
+
+    check()
+
+
+def test_ratio_store_json_round_trip_lossless():
+    """RatioStore save -> load reproduces every table bit-exactly (json
+    floats round-trip through repr) plus the learning conventions."""
+    pytest.importorskip("hypothesis", reason="property test needs the dev extra")
+    import os
+    import tempfile
+
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.integers(min_value=1, max_value=6),
+           st.sampled_from(["mean", "sum"]),
+           st.floats(min_value=0.0, max_value=1.0),
+           st.data())
+    @settings(max_examples=25, deadline=None)
+    def check(n, normalize, alpha, data):
+        keys = data.draw(st.lists(
+            st.text(alphabet="abcdef/_", min_size=1, max_size=8),
+            min_size=1, max_size=4, unique=True))
+        table = RatioTable(n, alpha=alpha, normalize=normalize)
+        for key in keys:
+            values = data.draw(st.lists(
+                st.floats(min_value=1e-9, max_value=1e9,
+                          allow_nan=False, allow_infinity=False),
+                min_size=n, max_size=n))
+            table.set(key, np.asarray(values))
+        with tempfile.TemporaryDirectory() as d:
+            store = RatioStore(os.path.join(d, "ratios.json"))
+            store.save(table)
+            loaded = store.load()
+        assert loaded.n_workers == n
+        assert loaded.alpha == alpha
+        assert loaded.normalize == normalize
+        assert sorted(loaded.keys()) == sorted(table.keys())
+        for key in keys:
+            np.testing.assert_array_equal(loaded.ratios(key),
+                                          table.ratios(key))
+
+    check()

@@ -1,6 +1,10 @@
-"""Tests for the kernel-config tuner (per-ISA table analogue)."""
+"""Tests for the kernel-config tuner (per-ISA table analogue) and its
+JSON persistence (TunerStore — block-shape tables warm-start across
+processes like ratio tables do)."""
 
-from repro.core import KernelTuner, shape_class
+import os
+
+from repro.core import KernelTuner, TunerStore, shape_class
 
 
 def test_shape_class_buckets():
@@ -34,3 +38,59 @@ def test_tuner_readapts_on_drift():
     for _ in range(10):
         t.report(key, "a", 5.0)
     assert t.select(key, ["a", "b"]) == "b"
+
+
+# ------------------------------------------------------- persistence ------
+KEY = ("q4_matmul", shape_class(1, 4096, 4096))
+CONFIGS = [(8, 128, 512), (8, 256, 512), (16, 256, 256)]
+SPEEDS = {(8, 128, 512): 3.0, (8, 256, 512): 1.0, (16, 256, 256): 2.0}
+
+
+def _trained_tuner() -> KernelTuner:
+    t = KernelTuner(alpha=0.3, min_trials=2)
+    for _ in range(2 * len(CONFIGS)):
+        c = t.select(KEY, CONFIGS)
+        t.report(KEY, c, SPEEDS[c])
+    return t
+
+
+def test_tuner_json_round_trip_preserves_state():
+    t = _trained_tuner()
+    u = KernelTuner.from_json(t.to_json())
+    assert u.alpha == t.alpha and u.min_trials == t.min_trials
+    assert u.best(KEY) == t.best(KEY) == (8, 256, 512)
+    # counts survive too: a round-tripped tuner is past warmup
+    assert u.select(KEY, CONFIGS) == (8, 256, 512)
+
+
+def test_tuner_store_warm_start_vs_cold(tmp_path):
+    """ROADMAP item: a warm-started tuner selects the learned argmin on
+    its first dispatch; a cold tuner must still spend min_trials x
+    len(configs) dispatches exploring."""
+    path = os.path.join(tmp_path, "tuner.json")
+    store = TunerStore(path)
+    assert store.load() is None and not store.exists()
+    store.save(_trained_tuner())
+    assert store.exists()
+
+    warm = KernelTuner(alpha=0.3, min_trials=2)
+    assert store.load_into(warm)
+    assert warm.select(KEY, CONFIGS) == (8, 256, 512)  # no exploration
+
+    # a cold tuner spends min_trials x len(configs) rounds exploring every
+    # candidate before it can exploit — the warm start skips all of that
+    cold = KernelTuner(alpha=0.3, min_trials=2)
+    explored = []
+    for _ in range(2 * len(CONFIGS)):
+        c = cold.select(KEY, CONFIGS)
+        explored.append(c)
+        cold.report(KEY, c, SPEEDS[c])
+    assert sorted(explored) == sorted(CONFIGS * 2)
+
+
+def test_tuner_store_refuses_alpha_mismatch(tmp_path):
+    path = os.path.join(tmp_path, "tuner.json")
+    TunerStore(path).save(_trained_tuner())  # alpha=0.3
+    other = KernelTuner(alpha=0.5, min_trials=2)
+    assert not TunerStore(path).load_into(other)
+    assert other.to_json() == KernelTuner(alpha=0.5, min_trials=2).to_json()
