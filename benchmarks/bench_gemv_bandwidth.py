@@ -17,6 +17,12 @@ projections, MLP up/gate/down, head) each dispatch under their own
 the step's byte traffic — the trunk-level achieved-bandwidth fraction the
 serving engine's balanced-trunk mode reproduces end to end.
 
+The NUMA section poses the same question on the dual-socket machines:
+socket-local two-level dispatch (outer split across bandwidth domains,
+Eq. 2/3 within each) against the socket-oblivious baseline (one flat
+dispatcher, interleaved pages paying the fabric penalty).  Target:
+socket-local dynamic >= 0.90 of *aggregate* bandwidth, oblivious <= 0.85.
+
   PYTHONPATH=src python -m benchmarks.bench_gemv_bandwidth [--smoke]
 """
 
@@ -24,10 +30,12 @@ from __future__ import annotations
 
 from repro.kernels import GEMV_ISA, HybridKernelDispatcher, kernel_key
 from repro.runtime import KernelSpec
+from repro.topology import TopologyDispatcher
 
 from .common import GEMV_SHAPE, Q4_BYTES_PER_ELEM, fmt
 
 MACHINES = ("ultra-125h", "core-12900k")
+TOPOLOGY_MACHINES = ("dual-125h", "2s-12900k")
 
 # One llama2-7B decode step's Q4 GEMV regions: (kind, N rows, K cols,
 # calls per step) — d_model 4096, d_ff 11008, vocab 32000, per layer:
@@ -84,6 +92,64 @@ def trunk_steady_state(machine: str, *, dynamic: bool, iters: int = 20,
                                    bytes_per_unit=k * Q4_BYTES_PER_ELEM)
                 step_seconds += st.makespan
     return step_seconds, disp.achieved_bandwidth_fraction()
+
+
+def numa_steady_state(machine: str, *, socket_local: bool, iters: int = 40,
+                      warmup: int = 20, seed: int = 0):
+    """Steady-state GEMV dispatch on a dual-socket machine: socket-local
+    two-level split or the socket-oblivious flat baseline (both dynamic —
+    the comparison isolates topology awareness, not ratio learning).
+    Returns (mean post-warmup makespan, aggregate achieved-bandwidth
+    fraction, per-socket fractions)."""
+    _, n, k = GEMV_SHAPE
+    disp = TopologyDispatcher(machine, socket_local=socket_local, seed=seed,
+                              keep_stats=False)
+    spec = KernelSpec("q4_gemv", isa=GEMV_ISA, granularity=8,
+                      work_per_unit=k * Q4_BYTES_PER_ELEM)
+    makespans = []
+    for i in range(iters):
+        if i == warmup:
+            disp.reset_bandwidth_accounting()
+        st = disp.dispatch(spec, n, bytes_per_unit=k * Q4_BYTES_PER_ELEM)
+        if i >= warmup:
+            makespans.append(st.makespan)
+    per_socket = ([disp.achieved_bandwidth_fraction(socket=s)
+                   for s in range(disp.n_sockets)] if socket_local else [])
+    return (sum(makespans) / len(makespans),
+            disp.achieved_bandwidth_fraction(), per_socket)
+
+
+def _measure_numa(iters: int = 40, warmup: int = 20) -> dict:
+    """Per dual-socket machine: (local makespan, local aggregate frac,
+    local per-socket fracs, oblivious makespan, oblivious frac)."""
+    return {
+        machine: (*numa_steady_state(machine, socket_local=True,
+                                     iters=iters, warmup=warmup),
+                  *numa_steady_state(machine, socket_local=False,
+                                     iters=iters, warmup=warmup)[:2])
+        for machine in TOPOLOGY_MACHINES
+    }
+
+
+def _numa_rows(measured: dict) -> list[tuple]:
+    _, n, k = GEMV_SHAPE
+    total_bytes = n * k * Q4_BYTES_PER_ELEM
+    rows = []
+    for machine, (loc, loc_frac, per_socket, obl, obl_frac) in measured.items():
+        sockets = "|".join(f"socket{i}_bw_frac={f:.3f}"
+                           for i, f in enumerate(per_socket))
+        rows.append((
+            f"numa_gemv_oblivious_{machine}", fmt(obl),
+            f"gbps={total_bytes / obl / 1e9:.1f}"
+            f"|achieved_bw_frac={obl_frac:.3f}",
+        ))
+        rows.append((
+            f"numa_gemv_socket_local_{machine}", fmt(loc),
+            f"gbps={total_bytes / loc / 1e9:.1f}"
+            f"|achieved_bw_frac={loc_frac:.3f}|{sockets}"
+            f"|improvement_pct={(obl - loc) / loc * 100:.0f}",
+        ))
+    return rows
 
 
 def _measure(iters: int = 40, tail: int = 10) -> dict:
@@ -149,9 +215,11 @@ def _trunk_rows(measured: dict) -> list[tuple]:
 
 
 def run(iters: int = 40, tail: int = 10, trunk_iters: int = 20,
-        trunk_warmup: int = 8) -> list[tuple]:
+        trunk_warmup: int = 8, numa_iters: int = 40,
+        numa_warmup: int = 20) -> list[tuple]:
     return (_rows(_measure(iters, tail))
-            + _trunk_rows(_measure_trunk(trunk_iters, trunk_warmup)))
+            + _trunk_rows(_measure_trunk(trunk_iters, trunk_warmup))
+            + _numa_rows(_measure_numa(numa_iters, numa_warmup)))
 
 
 def main() -> int:
@@ -164,8 +232,11 @@ def main() -> int:
     measured = _measure(iters=16, tail=4) if args.smoke else _measure()
     trunk = (_measure_trunk(iters=10, warmup=6) if args.smoke
              else _measure_trunk())
+    numa = (_measure_numa(iters=24, warmup=16) if args.smoke
+            else _measure_numa())
     print("name,us_per_call,derived")
-    for name, us, extra in _rows(measured) + _trunk_rows(trunk):
+    for name, us, extra in (_rows(measured) + _trunk_rows(trunk)
+                            + _numa_rows(numa)):
         print(f"{name},{us:.1f},{extra}")
     for machine, (_, dyn_frac, _, sta_frac) in measured.items():
         print(f"# {machine}: dynamic achieved_bw_frac={dyn_frac:.3f} "
@@ -178,6 +249,17 @@ def main() -> int:
               f"static={sta_frac:.3f}")
         if not dyn_frac > sta_frac:
             print(f"# FAIL: trunk dynamic did not beat static on {machine}")
+            return 1
+    for machine, (_, loc_frac, _, _, obl_frac) in numa.items():
+        print(f"# {machine} numa: socket_local achieved_bw_frac="
+              f"{loc_frac:.3f} oblivious={obl_frac:.3f}")
+        if not loc_frac >= 0.90:
+            print(f"# FAIL: socket-local dispatch below 0.90 aggregate "
+                  f"bandwidth on {machine}")
+            return 1
+        if not obl_frac <= 0.85:
+            print(f"# FAIL: socket-oblivious baseline above 0.85 on "
+                  f"{machine} (penalty model broken?)")
             return 1
     return 0
 

@@ -37,6 +37,7 @@ import jax
 from repro.configs import reduced_config
 from repro.kernels import HybridKernelDispatcher
 from repro.models import BalancedTrunk, init_params
+from repro.topology import TopologyDispatcher
 from repro.serving import (
     DECODE,
     PREFILL,
@@ -50,6 +51,7 @@ from repro.serving import (
 from .common import fmt
 
 MACHINES = ("ultra-125h", "core-12900k")
+TOPOLOGY_MACHINES = ("dual-125h", "2s-12900k")
 
 # rate chosen near ~75% utilization of the 8-slot virtual machine so the
 # percentiles reflect scheduling, not unbounded overload queueing.
@@ -119,18 +121,39 @@ def trunk_config():
         vocab_size=2048)
 
 
+def numa_trunk_config():
+    """Wider still for the dual-socket rows: the outer socket split halves
+    every region's per-core rows, so N must be ~2x the single-socket
+    config for the aggregate fraction to measure balance rather than
+    integer-granularity rounding across 28 cores."""
+    return dataclasses.replace(
+        reduced_config("granite-8b"), d_model=512, d_ff=1024,
+        vocab_size=4096)
+
+
 def run_balanced_trunk(machine: str, p, *, dynamic: bool, seed: int = 0,
-                       model=None):
+                       model=None, topology: bool = False,
+                       socket_local: bool = True):
     """Engine with the whole trunk (+head) through balanced fp32 shard
     dispatch; returns (report, decode achieved-bw fraction measured after a
-    warmup batch converged the per-kind ratio tables, dispatcher)."""
+    warmup batch converged the per-kind ratio tables, dispatcher).
+
+    ``topology=True`` treats ``machine`` as a multi-socket topology name:
+    socket-local two-level dispatch with NUMA-placed weights, or — with
+    ``socket_local=False`` — the socket-oblivious flat baseline (the
+    virtual clock runs on the flattened machine either way)."""
     cfg, params = model or (None, None)
     if cfg is None:
         cfg = trunk_config()
         params = init_params(cfg, jax.random.key(0))
-    disp = HybridKernelDispatcher.virtual(machine, seed=seed,
-                                          dynamic=dynamic, execute=True,
-                                          keep_stats=False)
+    if topology:
+        disp = TopologyDispatcher(machine, seed=seed, dynamic=dynamic,
+                                  socket_local=socket_local, execute=True,
+                                  keep_stats=False)
+    else:
+        disp = HybridKernelDispatcher.virtual(machine, seed=seed,
+                                              dynamic=dynamic, execute=True,
+                                              keep_stats=False)
     trunk = BalancedTrunk.from_params(cfg, params, disp, quant="fp32")
     eng = ContinuousBatchingEngine(
         cfg, params, max_slots=p["slots"],
@@ -208,6 +231,33 @@ def _rows(machine: str, p):
     return rows
 
 
+def _numa_rows(machine: str, p, model=None) -> list:
+    """Dual-socket serving rows: socket-local dynamic trunk dispatch vs the
+    socket-oblivious baseline, both through the real engine (paper claim at
+    topology scale: >=0.90 aggregate achieved-bandwidth fraction vs <=0.85
+    for socket-oblivious)."""
+    loc, loc_frac, loc_disp = run_balanced_trunk(
+        machine, p, dynamic=True, model=model, topology=True)
+    obl, obl_frac, _ = run_balanced_trunk(
+        machine, p, dynamic=True, model=model, topology=True,
+        socket_local=False)
+    sockets = "|".join(
+        f"socket{s}_bw_frac={loc_disp.achieved_bandwidth_fraction(socket=s):.3f}"
+        for s in range(loc_disp.n_sockets))
+    return [
+        (f"serving_numa_local_{machine}", fmt(loc.ttft[50]),
+         f"decode_bw_frac={loc_frac:.3f}|{sockets}"
+         f"|tok_s={loc.throughput:.1f}"
+         f"|goodput={loc.goodput:.2f}"),
+        (f"serving_numa_oblivious_{machine}", fmt(obl.ttft[50]),
+         f"decode_bw_frac={obl_frac:.3f}"
+         f"|tok_s={obl.throughput:.1f}"
+         f"|goodput={obl.goodput:.2f}"
+         f"|socket_local_bw_gain_pct="
+         f"{(loc_frac / max(obl_frac, 1e-9) - 1) * 100:.0f}"),
+    ]
+
+
 def _trunk_rows(machine: str, p, model=None) -> list:
     dyn, dyn_frac, _ = run_balanced_trunk(machine, p, dynamic=True,
                                           model=model)
@@ -267,6 +317,10 @@ def run(smoke: bool = False, sweep: bool = False) -> list:
     model = (cfg, init_params(cfg, jax.random.key(0)))
     for machine in MACHINES:
         rows += _trunk_rows(machine, tp, model=model)
+    numa_cfg = numa_trunk_config()
+    numa_model = (numa_cfg, init_params(numa_cfg, jax.random.key(0)))
+    for machine in TOPOLOGY_MACHINES:
+        rows += _numa_rows(machine, tp, model=numa_model)
     return rows
 
 

@@ -185,8 +185,16 @@ MACHINES = {
 }
 
 
-def make_machine(name: str, seed: int = 0) -> SimulatedHybridCPU:
-    try:
+def make_machine(name: str, seed: int = 0):
+    """Resolve a machine name: flat hybrid CPUs from :data:`MACHINES`, or a
+    multi-socket :class:`~repro.topology.machine.MachineTopology` from
+    :data:`~repro.topology.machine.TOPOLOGIES` (lazily imported — the
+    topology package builds on this module).  ``seed`` is forwarded to
+    whichever constructor matches."""
+    if name in MACHINES:
         return MACHINES[name](seed)
-    except KeyError:
-        raise KeyError(f"unknown machine {name!r}; known: {sorted(MACHINES)}")
+    from repro.topology.machine import make_topology
+
+    # make_topology owns the topology registry and the unknown-name error
+    # (which lists both registries)
+    return make_topology(name, seed=seed)

@@ -73,7 +73,8 @@ from repro.kernels.q4_matmul import CANDIDATE_BLOCKS as _Q4_CANDIDATES
 from . import ops
 
 __all__ = ["HybridKernelDispatcher", "GEMM_ISA", "GEMV_ISA",
-           "TRUNK_KINDS", "kernel_key", "bridged_linear"]
+           "TRUNK_KINDS", "kernel_key", "bridged_linear",
+           "bridged_linear_fused"]
 
 GEMM_ISA = "avx_vnni"   # compute-bound prefill GEMM
 GEMV_ISA = "membw"      # memory-bound decode GEMV
@@ -130,6 +131,54 @@ def bridged_linear(layer, x: jax.Array, *, isa: str,
     return out.astype(x.dtype)
 
 
+def _bridge_run_multi(layers, isa: str, keys, x) -> np.ndarray:
+    """Host half of :func:`bridged_linear_fused`: one round trip runs every
+    layer's balanced shard dispatch back to back (program order preserved,
+    so ratio-table updates are identical to separate bridged calls)."""
+    xj = jnp.asarray(x, jnp.float32)
+    return np.concatenate(
+        [np.asarray(layer(xj, isa=isa, key=key), dtype=np.float32)
+         for layer, key in zip(layers, keys)], axis=-1)
+
+
+def bridged_linear_fused(layers, x: jax.Array, *, isa: str, keys,
+                         allow_callback: bool = True) -> tuple:
+    """Apply several host-side balanced linears that share the same input
+    through ONE jit-bridge round trip (the fused-q/k/v optimization: an
+    attention layer's three input projections become a single ordered
+    ``io_callback`` instead of three).
+
+    Each layer still runs as its own balanced shard-dispatch region with
+    its own table ``key`` — in the same order a sequence of
+    :func:`bridged_linear` calls would — so outputs, shard times, and
+    ratio-table updates are bit-identical to the per-matmul path; only the
+    number of host round trips changes.  Returns one array per layer.
+    """
+    keys = list(keys)
+    if len(keys) != len(layers):
+        raise ValueError("need one table key per fused layer")
+    if not isinstance(x, jax.core.Tracer):
+        # eager: no bridge to amortize, so no concat/split round trip
+        return tuple(layer(x, isa=isa, key=key).astype(x.dtype)
+                     for layer, key in zip(layers, keys))
+    if not allow_callback:
+        raise RuntimeError(
+            "balanced trunk was built with jit_bridge=False but its "
+            "projections are being traced; run the forward eagerly "
+            "(the engine skips jax.jit for such trunks)")
+    widths = [layer.out_features for layer in layers]
+    out_shape = jax.ShapeDtypeStruct(x.shape[:-1] + (sum(widths),),
+                                     jnp.float32)
+    fn = functools.partial(_bridge_run_multi, layers, isa, keys)
+    cat = io_callback(fn, out_shape, x, ordered=True)
+    outs, lo = [], 0
+    for w in widths:
+        outs.append(jax.lax.slice_in_dim(cat, lo, lo + w, axis=-1)
+                    .astype(x.dtype))
+        lo += w
+    return tuple(outs)
+
+
 class HybridKernelDispatcher:
     """Per-core balanced dispatch of kernel parallel regions.
 
@@ -162,6 +211,7 @@ class HybridKernelDispatcher:
         self.interpret = interpret
         self.keep_stats = keep_stats
         self.stats: list = []
+        self.last_stats: Optional[RegionStats] = None
         self._pool_factory = pool_factory
         self._pools: Dict[str, object] = {}
         self._balancers: Dict[tuple, Balancer] = {}
@@ -177,6 +227,11 @@ class HybridKernelDispatcher:
         shards (correctness under virtual timing)."""
         if isinstance(machine, str):
             machine = make_machine(machine, seed=seed)
+        if hasattr(machine, "sockets"):  # a MachineTopology, not a flat CPU
+            raise ValueError(
+                "multi-socket machines need repro.topology."
+                "TopologyDispatcher (one flat dispatcher per bandwidth "
+                "domain); HybridKernelDispatcher balances one socket")
         return cls(
             lambda isa: VirtualWorkerPool(machine, isa=isa, execute=execute),
             machine.n_cores, machine=machine, **kwargs)
@@ -214,17 +269,21 @@ class HybridKernelDispatcher:
     # ------------------------------------------------------------ dispatch --
     def dispatch(self, spec: KernelSpec, total: int,
                  fn: Optional[Callable[[int, int], None]] = None, *,
-                 bytes_per_unit: float = 0.0,
+                 bytes_per_unit: float = 0.0, work_scale: float = 1.0,
                  update: bool = True) -> RegionStats:
         """One balanced parallel region of ``total`` units along the
         kernel's split dimension: plan per-core contiguous shards, run them
         on the ISA's pool, feed shard times back.  ``fn(start, size)``
-        executes one shard (``None``: purely modelled)."""
+        executes one shard (``None``: purely modelled).  ``work_scale``
+        inflates the modelled work per unit without changing the bytes
+        accounting — the NUMA hook: a byte streamed from a remote socket
+        costs ``cross_socket_penalty`` wall time but is still one byte."""
         bal = self._balancer(spec)
         plan = bal.plan(total)
+        work_per_unit = spec.work_per_unit * work_scale
         subtasks = [
             SubTask(worker=w, start=lo, size=hi - lo,
-                    work=float(hi - lo) * spec.work_per_unit, fn=fn)
+                    work=float(hi - lo) * work_per_unit, fn=fn)
             for w, (lo, hi) in enumerate(plan.ranges)
         ]
         times = self._pool(spec.isa).run(subtasks)
@@ -237,6 +296,7 @@ class HybridKernelDispatcher:
             self._busy[spec.isa] = self._busy.get(spec.isa, 0.0) + st.makespan
         if self.keep_stats:
             self.stats.append(st)
+        self.last_stats = st
         return st
 
     # ----------------------------------------------------------- telemetry --
@@ -297,7 +357,7 @@ class HybridKernelDispatcher:
     def q4_matmul(self, x, qw: QuantizedLinear, *, isa: str = GEMV_ISA,
                   key: Optional[str] = None,
                   blocks: Optional[tuple] = None, granularity: int = 8,
-                  update: bool = True):
+                  work_scale: float = 1.0, update: bool = True):
         """Fp32-Int4-Fp32 ``x (M,K) @ Q4_0 (N,K).T`` as balanced per-core
         N-row shards.  ``isa`` keys the ratio table ("membw" for decode
         GEMV, "avx_vnni" when the same kernel runs compute-bound prefill);
@@ -322,13 +382,13 @@ class HybridKernelDispatcher:
         spec = KernelSpec("q4_matmul", isa=isa, granularity=granularity,
                           work_per_unit=work, key=key)
         self.dispatch(spec, n, fn, bytes_per_unit=bytes_per_row,
-                      update=update)
+                      work_scale=work_scale, update=update)
         return jnp.asarray(out)
 
     def int8_gemm(self, a_u8, w_s8, *, isa: str = GEMM_ISA,
                   key: Optional[str] = None,
                   blocks: Optional[tuple] = None, granularity: int = 16,
-                  update: bool = True):
+                  work_scale: float = 1.0, update: bool = True):
         """u8 (M,K) x s8 (N,K) -> s32 (M,N) as balanced per-core N-row
         shards (the paper's VNNI prefill GEMM; s32 accumulation makes shard
         outputs bit-identical to the monolithic grid)."""
@@ -346,12 +406,13 @@ class HybridKernelDispatcher:
         work = 2.0 * m * k if isa != GEMV_ISA else float(k)
         spec = KernelSpec("int8_gemm", isa=isa, granularity=granularity,
                           work_per_unit=work, key=key)
-        self.dispatch(spec, n, fn, bytes_per_unit=float(k), update=update)
+        self.dispatch(spec, n, fn, bytes_per_unit=float(k),
+                      work_scale=work_scale, update=update)
         return jnp.asarray(out)
 
     def f32_matmul(self, x, w, *, isa: str = GEMV_ISA,
                    key: Optional[str] = None, granularity: int = 1,
-                   update: bool = True):
+                   work_scale: float = 1.0, update: bool = True):
         """f32 ``x (M,K) @ W (N,K).T`` as balanced per-core N-row shards of
         a plain host matmul — no quantization, no block constraints
         (``granularity=1``), so shard-wise output is exactly the monolithic
@@ -372,5 +433,5 @@ class HybridKernelDispatcher:
         spec = KernelSpec("f32_matmul", isa=isa, granularity=granularity,
                           work_per_unit=work, key=key)
         self.dispatch(spec, n, fn, bytes_per_unit=bytes_per_row,
-                      update=update)
+                      work_scale=work_scale, update=update)
         return jnp.asarray(out)

@@ -33,6 +33,7 @@ from repro.kernels import (
 )
 from repro.models import BalancedTrunk, balanced_lm_head, init_params
 from repro.runtime import RatioStore, RatioTable
+from repro.topology import TOPOLOGIES, TopologyDispatcher
 from repro.serving import (
     DECODE,
     PREFILL,
@@ -71,9 +72,18 @@ def main() -> int:
                     help="open-loop Poisson arrival rate, req/s (0: all at t=0)")
     ap.add_argument("--prefill-chunk", type=int, default=8,
                     help="prompt tokens prefilled per iteration (0: one-shot)")
-    ap.add_argument("--machine", default="ultra-125h",
+    ap.add_argument("--machine", default=None,
                     choices=sorted(MACHINES) + ["wall"],
-                    help="virtual hybrid-CPU clock, or 'wall' for real time")
+                    help="virtual hybrid-CPU clock (default ultra-125h), "
+                         "or 'wall' for real time")
+    ap.add_argument("--topology", default=None,
+                    choices=sorted(TOPOLOGIES) + sorted(MACHINES),
+                    help="serve on a NUMA topology: the balanced trunk "
+                         "dispatches socket-local (two-level ratio split, "
+                         "NUMA-placed weights) and the virtual clock runs "
+                         "on the flattened machine; implies "
+                         "--balanced-trunk (flat machine names are the "
+                         "1-socket special case)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ratios", default=None,
                     help="JSON path to warm-start/persist replica ratios")
@@ -97,6 +107,16 @@ def main() -> int:
                          "tuner's block-shape tables (shared across "
                          "replicas, like --ratios for ratio tables)")
     args = ap.parse_args()
+    if args.topology:
+        if args.balanced_head:
+            raise SystemExit("--topology dispatches the whole trunk; "
+                             "drop --balanced-head")
+        if args.machine is not None:
+            raise SystemExit(
+                "--topology provides the virtual clock (the topology's "
+                "flattened machine); drop --machine")
+        args.balanced_trunk = True
+    args.machine = args.machine or "ultra-125h"
     if args.balanced_head and args.balanced_trunk:
         raise SystemExit("--balanced-trunk already includes the head; "
                          "drop --balanced-head")
@@ -131,16 +151,22 @@ def main() -> int:
     if tuner_store is not None and tuner_store.load_into(tuner):
         print(f"[serve] warm-started kernel tuner from {args.tuner_cache}")
     for i, n_slots in enumerate(slot_counts):
+        clock = args.topology or args.machine
         cost = (None if args.machine == "wall"
-                else HybridPhaseCost(args.machine, seed=args.seed + i))
+                else HybridPhaseCost(clock, seed=args.seed + i))
         head, trunk = None, None
         if args.balanced_head or args.balanced_trunk:
-            disp = (HybridKernelDispatcher.threaded(4, keep_stats=False,
-                                                    tuner=tuner)
-                    if args.machine == "wall"
-                    else HybridKernelDispatcher.virtual(
-                        args.machine, seed=args.seed + i, execute=True,
-                        keep_stats=False, tuner=tuner))
+            if args.topology:
+                disp = TopologyDispatcher(args.topology,
+                                          seed=args.seed + i, execute=True,
+                                          keep_stats=False, tuner=tuner)
+            elif args.machine == "wall":
+                disp = HybridKernelDispatcher.threaded(4, keep_stats=False,
+                                                       tuner=tuner)
+            else:
+                disp = HybridKernelDispatcher.virtual(
+                    args.machine, seed=args.seed + i, execute=True,
+                    keep_stats=False, tuner=tuner)
             dispatchers.append(disp)
             if args.balanced_trunk:
                 trunk = BalancedTrunk.from_params(cfg, params, disp,
@@ -196,7 +222,26 @@ def main() -> int:
         print(f"[serve] balanced-head kernel table (replica 0): "
               f"membw spread={kt.max() / kt.min():.2f}x "
               f"achieved_bw_frac={d0.achieved_bandwidth_fraction():.2f}")
-    if args.balanced_trunk and args.machine != "wall":
+    if args.topology:
+        d0 = dispatchers[0]
+        print(f"[serve] topology {args.topology}: "
+              f"{d0.topology.n_sockets} socket(s), "
+              f"aggregate {d0.topology.aggregate_bandwidth / 1e9:.1f} GB/s")
+        if engines[0].placement is not None:
+            for line in engines[0].placement.lines():
+                print(line)
+        for kind in TRUNK_KINDS:
+            key = kernel_key(GEMV_ISA, kind)
+            if key in d0.table.keys():
+                print(f"[serve] socket split {key}: "
+                      f"{np.round(d0.socket_ratios(key), 3).tolist()}")
+        fracs = [d0.achieved_bandwidth_fraction(socket=s)
+                 for s in range(d0.topology.n_sockets)]
+        print(f"[serve] per-socket decode achieved_bw_frac (replica 0): "
+              f"{[round(f, 2) for f in fracs]}")
+        print(f"[serve] aggregate decode achieved_bw_frac (replica 0): "
+              f"{d0.achieved_bandwidth_fraction():.2f}")
+    elif args.balanced_trunk and args.machine != "wall":
         d0 = dispatchers[0]
         for kind in TRUNK_KINDS:
             key = kernel_key(GEMV_ISA, kind)

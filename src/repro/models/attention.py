@@ -103,16 +103,22 @@ def attn_fwd(
     With cache: appends this chunk's K/V at ``cache.idx`` (prefill writes a
     block, decode writes one token) and attends over everything valid.
     ``proj(name, x, w)`` overrides each projection matmul (balanced hybrid
-    dispatch of the trunk); default is the in-graph ``x @ w``.
+    dispatch of the trunk); default is the in-graph ``x @ w``.  A ``proj``
+    carrying a ``qkv`` attribute fuses the three input projections into
+    one call (one jit-bridge round trip per layer instead of three).
     """
     b, s, d = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     g = hq // hkv
 
     mm = proj or (lambda name, x, w: x @ w)
-    q = mm("wq", x, p["wq"])
-    k = mm("wk", x, p["wk"])
-    v = mm("wv", x, p["wv"])
+    fused_qkv = getattr(mm, "qkv", None)
+    if fused_qkv is not None:
+        q, k, v = fused_qkv(x, p["wq"], p["wk"], p["wv"])
+    else:
+        q = mm("wq", x, p["wq"])
+        k = mm("wk", x, p["wk"])
+        v = mm("wv", x, p["wv"])
     if cfg.qkv_bias:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q = q.reshape(b, s, hq, hd).transpose(0, 2, 1, 3)

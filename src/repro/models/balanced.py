@@ -32,7 +32,11 @@ from typing import Callable, Dict, List, Optional, Tuple
 import jax
 
 from repro.configs.base import ModelConfig
-from repro.kernels.dispatch import bridged_linear, kernel_key
+from repro.kernels.dispatch import (
+    bridged_linear,
+    bridged_linear_fused,
+    kernel_key,
+)
 
 from .layers import BalancedFp32Linear, BalancedLinear, BalancedQuantLinear
 
@@ -70,19 +74,27 @@ class BalancedTrunk:
 
     def __init__(self, cfg: ModelConfig, dispatcher, *,
                  bank: Dict[Tuple[int, str, str], List],
-                 head=None, quant: str = "q4", jit_bridge: bool = True):
+                 head=None, quant: str = "q4", jit_bridge: bool = True,
+                 fused: bool = True):
         self.cfg = cfg
         self.dispatcher = dispatcher
         self.bank = bank
         self.head = head
         self.quant = quant
         self.jit_bridge = jit_bridge
+        # Fused q/k/v: the three input projections of an attention layer
+        # share one jit-bridge round trip (a single ordered io_callback)
+        # instead of three.  Token-identical to the per-matmul path — the
+        # host side still runs three separate balanced regions in the same
+        # program order — so False exists only as the identity reference.
+        self.fused = fused
 
     # -------------------------------------------------------- construction --
     @classmethod
     def from_params(cls, cfg: ModelConfig, params: dict, dispatcher, *,
                     quant: str = "q4", include_head: bool = True,
-                    jit_bridge: bool = True) -> "BalancedTrunk":
+                    jit_bridge: bool = True,
+                    fused: bool = True) -> "BalancedTrunk":
         """Quantize (or copy, for fp32) every supported trunk projection of
         ``params`` into dispatcher-bound balanced linears.
 
@@ -116,7 +128,7 @@ class BalancedTrunk:
                  else params["embed"]["out"].T)  # (vocab, d_model)
             head = layer_cls.from_dense(w, dispatcher)
         return cls(cfg, dispatcher, bank=bank, head=head, quant=quant,
-                   jit_bridge=jit_bridge)
+                   jit_bridge=jit_bridge, fused=fused)
 
     # ----------------------------------------------------------- dispatch --
     def supports(self, j: int, group: str) -> bool:
@@ -139,6 +151,23 @@ class BalancedTrunk:
             return bridged_linear(layers[rep], x, isa=isa,
                                   key=kernel_key(isa, kind),
                                   allow_callback=self.jit_bridge)
+
+        if (self.fused and group == "attn"
+                and all((j, "attn", n) in self.bank
+                        for n in ("wq", "wk", "wv"))):
+            qkv_layers = [self.bank[(j, "attn", n)][rep]
+                          for n in ("wq", "wk", "wv")]
+            qkv_keys = [kernel_key(isa, _KIND[("attn", n)])
+                        for n in ("wq", "wk", "wv")]
+
+            def qkv(x: jax.Array, wq, wk, wv) -> tuple:
+                # one jit-bridge round trip for all three projections;
+                # wq/wk/wv are ignored (the banked weights are the truth)
+                return bridged_linear_fused(
+                    qkv_layers, x, isa=isa, keys=qkv_keys,
+                    allow_callback=self.jit_bridge)
+
+            proj.qkv = qkv
 
         return proj
 

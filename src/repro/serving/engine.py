@@ -149,7 +149,7 @@ class ContinuousBatchingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int,
                  max_seq: int, prefill_chunk: Optional[int] = None,
                  sampler: Optional[Callable] = None, cost_model=None,
-                 balanced_head=None, balanced_trunk=None,
+                 balanced_head=None, balanced_trunk=None, topology=None,
                  donate_state: bool = True):
         self.cfg = cfg
         self.params = params
@@ -172,6 +172,13 @@ class ContinuousBatchingEngine:
                 "not both")
         self.balanced_trunk = balanced_trunk
         self.balanced_head = balanced_head
+        # NUMA wiring: a balanced trunk bound to a repro.topology.
+        # TopologyDispatcher is adopted automatically — its weights are
+        # placed (column ranges pinned to the socket that streams them)
+        # and the topology is exposed for telemetry.  Passing ``topology=``
+        # explicitly asserts which machine the trunk must be balanced over.
+        self.topology, self.placement = self._adopt_topology(
+            balanced_trunk, topology)
         apply_head = (balanced_head is None
                       and (balanced_trunk is None
                            or balanced_trunk.head is None))
@@ -215,6 +222,33 @@ class ContinuousBatchingEngine:
 
         self._prefill = _prefill
         self._decode = _decode
+
+    @staticmethod
+    def _adopt_topology(trunk, topology):
+        """Resolve the engine's machine topology from the balanced trunk's
+        dispatcher (placing the trunk's weights NUMA-aware when the
+        dispatcher is socket-local) and validate an explicit ``topology=``
+        against it.  Returns (topology, TrunkPlacement) — (None, None)
+        for flat dispatch."""
+        from repro.topology import TopologyDispatcher, place_trunk
+
+        disp = getattr(trunk, "dispatcher", None)
+        if not isinstance(disp, TopologyDispatcher):
+            if topology is not None:
+                raise ValueError(
+                    "topology= requires a balanced_trunk bound to a "
+                    "repro.topology.TopologyDispatcher (the trunk decides "
+                    "where its weights execute)")
+            return None, None
+        adopted = disp.topology
+        if topology is not None:
+            name = topology if isinstance(topology, str) else topology.name
+            if (topology is not adopted and name != adopted.name):
+                raise ValueError(
+                    f"topology= names {name!r} but the balanced trunk is "
+                    f"balanced over {adopted.name!r}")
+        placement = place_trunk(trunk) if disp.socket_local else None
+        return adopted, placement
 
     def _head(self, hidden: jax.Array, phase: str) -> jax.Array:
         """Apply the (possibly balanced) LM head to (B, d) hidden states."""

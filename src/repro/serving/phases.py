@@ -109,6 +109,12 @@ class HybridPhaseCost:
                  decode_units: int = 4096):
         if isinstance(machine, str):
             machine = make_machine(machine, seed=seed)
+        if hasattr(machine, "flattened"):
+            # A MachineTopology: the phase cost model only needs total
+            # compute and aggregate bandwidth for its virtual clock, so it
+            # runs over the flattened view (socket-local kernel timing
+            # lives in repro.topology.TopologyDispatcher).
+            machine = machine.flattened()
         self.machine = machine
         self.table = table or RatioTable(machine.n_cores, alpha=alpha)
         if self.table.n_workers != machine.n_cores:

@@ -417,7 +417,7 @@ def test_engine_decodes_through_balanced_head():
     assert spread.max() / spread.min() > 1.1  # hybrid cores differentiated
 
 
-def _run_trunk_engine(quant, jit_bridge, n_requests=3, steps=4):
+def _run_trunk_engine(quant, jit_bridge, n_requests=3, steps=4, fused=True):
     from repro.configs import reduced_config
     from repro.models import BalancedTrunk, init_params
     from repro.serving import (
@@ -430,7 +430,7 @@ def _run_trunk_engine(quant, jit_bridge, n_requests=3, steps=4):
     params = init_params(cfg, jax.random.key(0))
     disp = HybridKernelDispatcher.virtual("ultra-125h", execute=True)
     trunk = BalancedTrunk.from_params(cfg, params, disp, quant=quant,
-                                      jit_bridge=jit_bridge)
+                                      jit_bridge=jit_bridge, fused=fused)
     engine = ContinuousBatchingEngine(
         cfg, params, max_slots=2, max_seq=16, prefill_chunk=4,
         cost_model=HybridPhaseCost("ultra-125h"), balanced_trunk=trunk)
@@ -468,3 +468,48 @@ def test_trunk_eager_fallback_matches_jit_bridge():
     eager_reqs, _ = _run_trunk_engine("fp32", jit_bridge=False)
     for a, b in zip(jit_reqs, eager_reqs):
         assert a.generated == b.generated
+
+
+# ------------------------------------------------ fused q/k/v callbacks ---
+@pytest.mark.parametrize("jit_bridge", [True, False])
+def test_fused_qkv_token_identical_to_per_matmul(jit_bridge):
+    """Fusing q/k/v into one jit-bridge round trip must not change a
+    single token: the host side runs the same three balanced regions in
+    the same program order, so fp32 outputs are bit-identical."""
+    fused_reqs, fused_disp = _run_trunk_engine("fp32", jit_bridge=jit_bridge,
+                                               fused=True)
+    plain_reqs, plain_disp = _run_trunk_engine("fp32", jit_bridge=jit_bridge,
+                                               fused=False)
+    for a, b in zip(fused_reqs, plain_reqs):
+        assert a.generated == b.generated
+    # the ratio tables saw identical (region, time) sequences too
+    for key in plain_disp.table.keys():
+        np.testing.assert_allclose(fused_disp.table.ratios(key),
+                                   plain_disp.table.ratios(key))
+
+
+def test_fused_qkv_one_callback_per_attention_layer():
+    """The jitted decode step carries one io_callback for q/k/v per
+    attention layer (plus one each for wo / wi / wg / down): 4 fewer
+    round trips than the per-matmul path on the 2-layer reduced config."""
+    from repro.configs import reduced_config
+    from repro.models import BalancedTrunk, forward, init_params, init_state
+
+    cfg = reduced_config("granite-8b")
+    params = init_params(cfg, jax.random.key(0))
+
+    def n_callbacks(fused):
+        disp = HybridKernelDispatcher.virtual("ultra-125h", execute=True)
+        trunk = BalancedTrunk.from_params(cfg, params, disp, quant="fp32",
+                                          fused=fused)
+        state = init_state(cfg, 1, 8)
+        jaxpr = jax.make_jaxpr(
+            lambda p, t, s: forward(cfg, p, t, state=s, trunk=trunk,
+                                    trunk_isa="membw"))(
+            params, jnp.zeros((1, 1), jnp.int32), state)
+        return str(jaxpr).count("io_callback")
+
+    fused, plain = n_callbacks(True), n_callbacks(False)
+    n_attn = sum(1 for mixer, _ in cfg.layer_plan() if mixer == "attn")
+    assert fused == plain - 2 * n_attn
+    assert fused < plain

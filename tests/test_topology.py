@@ -1,0 +1,388 @@
+"""repro.topology: NUMA machine model, two-level socket-local dispatch,
+and NUMA-aware weight placement.
+
+Covers the PR-5 acceptance claims — socket-local dynamic dispatch sustains
+>= 0.90 of *aggregate* streaming bandwidth on both simulated dual-socket
+machines while the socket-oblivious baseline stays <= 0.85 — plus the
+structural contracts: the flat machine is the 1-socket special case,
+kernel outputs through the socket split are identical to the monolithic
+kernels, the outer ratio table learns true relative socket throughput on
+a heterogeneous topology, placement pins weights and prices remote
+streaming, and the serving engine adopts/places topology-bound trunks.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import CoreSpec, SimulatedHybridCPU, make_machine
+from repro.core.hybrid_sim import make_12900k, make_ultra_125h
+from repro.kernels import GEMV_ISA, HybridKernelDispatcher, ops, ref
+from repro.quant import quantize_q4_0, quantize_s8_symmetric
+from repro.runtime import KernelSpec
+from repro.topology import (
+    MachineTopology,
+    SocketSpec,
+    TOPOLOGIES,
+    TopologyDispatcher,
+    make_topology,
+    place_rows,
+    place_trunk,
+)
+
+RNG = np.random.default_rng(0)
+DUALS = sorted(TOPOLOGIES)
+
+GEMV_SPEC = KernelSpec("q4_gemv", isa=GEMV_ISA, granularity=8,
+                       work_per_unit=4096 * 0.5625)
+
+
+def _hetero_topology(slow: float = 0.5) -> MachineTopology:
+    """Two unequal sockets: a 125H cluster next to one with every
+    throughput scaled by ``slow`` — the outer split has something real to
+    learn."""
+    fast = make_ultra_125h(seed=0).cores
+    slow_cores = [CoreSpec(name=f"s1.{c.name}", kind=c.kind,
+                           throughput={k: v * slow
+                                       for k, v in c.throughput.items()},
+                           jitter=c.jitter)
+                  for c in fast]
+    return MachineTopology(
+        sockets=[SocketSpec("socket0", list(fast)),
+                 SocketSpec("socket1", slow_cores)],
+        cross_socket_penalty=1.8, name="hetero")
+
+
+# ---------------------------------------------------------- machine model --
+def test_dual_machines_shape_and_bandwidth():
+    for name, per_socket in (("dual-125h", make_ultra_125h),
+                             ("2s-12900k", make_12900k)):
+        topo = make_topology(name)
+        flat = per_socket()
+        assert topo.n_sockets == 2
+        assert topo.n_cores == 2 * flat.n_cores
+        assert topo.aggregate_bandwidth == pytest.approx(
+            2 * flat.socket_bandwidth)
+        for s in range(2):
+            assert topo.socket_bandwidth(s) == pytest.approx(
+                flat.socket_bandwidth)
+        np.testing.assert_allclose(topo.bandwidth_shares(), [0.5, 0.5])
+
+
+def test_domains_and_socket_of():
+    topo = make_topology("dual-125h")
+    d0, d1 = topo.domains()
+    assert (d0.core_start, d0.core_end) == (0, 14)
+    assert (d1.core_start, d1.core_end) == (14, 28)
+    assert topo.socket_of(0) == 0 and topo.socket_of(13) == 0
+    assert topo.socket_of(14) == 1 and topo.socket_of(27) == 1
+    with pytest.raises(IndexError):
+        topo.socket_of(28)
+
+
+def test_flat_machine_is_one_socket_special_case():
+    topo = make_topology("ultra-125h")
+    flat = make_ultra_125h()
+    assert topo.n_sockets == 1
+    assert topo.oblivious_blend == 1.0
+    assert topo.aggregate_bandwidth == pytest.approx(flat.socket_bandwidth)
+
+
+def test_oblivious_blend_interleave_model():
+    topo = make_topology("dual-125h")
+    # 2 sockets, interleaved pages: half the bytes remote at penalty 1.8
+    assert topo.oblivious_blend == pytest.approx(1.0 + 0.8 * 0.5)
+
+
+def test_flattened_view_merges_cores_not_pools():
+    topo = make_topology("2s-12900k")
+    flat = topo.flattened()
+    assert isinstance(flat, SimulatedHybridCPU)
+    assert flat.n_cores == topo.n_cores
+    assert flat.socket_bandwidth == pytest.approx(topo.aggregate_bandwidth)
+
+
+def test_per_socket_machines_have_distinct_jitter_streams():
+    topo = make_topology("dual-125h", seed=7)
+    t0 = topo.machines[0].task_time(0, "membw", 1e9, 0.0)
+    t1 = topo.machines[1].task_time(0, "membw", 1e9, 0.0)
+    assert t0 != t1  # same core spec, different seeded rng
+
+
+# --------------------------------------------------- make_machine satellite --
+def test_make_machine_forwards_seed_to_topologies():
+    topo = make_machine("dual-125h", seed=11)
+    assert isinstance(topo, MachineTopology)
+    assert topo.seed == 11
+    assert topo.machines[0].seed == 11 and topo.machines[1].seed == 12
+
+
+def test_make_machine_unknown_error_lists_topology_machines():
+    with pytest.raises(KeyError, match="topology machines"):
+        make_machine("no-such-machine")
+    with pytest.raises(KeyError, match="dual-125h"):
+        make_machine("no-such-machine")
+
+
+def test_make_topology_unknown_error():
+    with pytest.raises(KeyError, match="topology machines"):
+        make_topology("no-such-machine")
+
+
+def test_flat_dispatcher_refuses_topologies():
+    with pytest.raises(ValueError, match="TopologyDispatcher"):
+        HybridKernelDispatcher.virtual("dual-125h")
+
+
+# --------------------------------------------------- the headline claims ---
+@pytest.mark.parametrize("machine", DUALS)
+def test_socket_local_beats_oblivious_bandwidth(machine):
+    """PR-5 acceptance: socket-local dynamic dispatch >= 0.90 of aggregate
+    bandwidth; the socket-oblivious baseline (interleaved pages paying the
+    fabric penalty) <= 0.85."""
+    def frac(socket_local):
+        disp = TopologyDispatcher(machine, socket_local=socket_local)
+        for i in range(40):
+            if i == 20:
+                disp.reset_bandwidth_accounting()
+            disp.dispatch(GEMV_SPEC, 4096, bytes_per_unit=4096 * 0.5625)
+        return disp.achieved_bandwidth_fraction()
+
+    local, oblivious = frac(True), frac(False)
+    assert local >= 0.90, f"{machine}: socket-local {local:.2%}"
+    assert oblivious <= 0.85, f"{machine}: oblivious {oblivious:.2%}"
+
+
+@pytest.mark.parametrize("machine", DUALS)
+def test_per_socket_fractions_reported(machine):
+    disp = TopologyDispatcher(machine)
+    for i in range(30):
+        if i == 15:
+            disp.reset_bandwidth_accounting()
+        disp.dispatch(GEMV_SPEC, 4096, bytes_per_unit=4096 * 0.5625)
+    for s in range(disp.n_sockets):
+        f = disp.achieved_bandwidth_fraction(socket=s)
+        assert 0.85 < f <= 1.0
+    agg = disp.achieved_bandwidth_fraction()
+    assert agg <= max(disp.achieved_bandwidth_fraction(socket=s)
+                      for s in range(disp.n_sockets)) + 1e-9
+
+
+def test_socket_table_converges_on_heterogeneous_sockets():
+    """The outer units-feedback loop learns true relative socket
+    throughput: a half-speed socket ends up with ~1/3 of the rows."""
+    topo = _hetero_topology(slow=0.5)
+    disp = TopologyDispatcher(topo)
+    counts = None
+    for _ in range(40):
+        st = disp.dispatch(GEMV_SPEC, 4096)
+        counts = st.counts
+    ratios = disp.socket_ratios(GEMV_ISA)
+    assert ratios[0] / ratios[1] == pytest.approx(2.0, rel=0.15)
+    assert counts[0] / counts.sum() == pytest.approx(2 / 3, rel=0.1)
+
+
+def test_oblivious_has_no_socket_level_views():
+    disp = TopologyDispatcher("dual-125h", socket_local=False)
+    disp.dispatch(GEMV_SPEC, 4096, bytes_per_unit=4096 * 0.5625)
+    with pytest.raises(ValueError, match="socket"):
+        disp.socket_ratios(GEMV_ISA)
+    with pytest.raises(ValueError, match="oblivious"):
+        disp.achieved_bandwidth(socket=0)
+
+
+# ----------------------------------------------- kernels through the split --
+@pytest.mark.parametrize("n,k", [(300, 128), (101, 64), (5, 64)])
+def test_topology_q4_matmul_identical_to_monolithic(n, k):
+    x = jnp.asarray(RNG.normal(size=(3, k)).astype(np.float32))
+    qw = quantize_q4_0(jnp.asarray(RNG.normal(size=(n, k)).astype(np.float32)))
+    disp = TopologyDispatcher("dual-125h", execute=True)
+    got = disp.q4_matmul(x, qw, blocks=(8, 256, k))
+    want = ops.q4_matmul(x, qw, blocks=(8, 256, k), interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_topology_int8_gemm_identical():
+    a = jnp.asarray(RNG.integers(0, 256, size=(8, 128)), dtype=jnp.uint8)
+    w = jnp.asarray(RNG.integers(-127, 128, size=(200, 128)), dtype=jnp.int8)
+    disp = TopologyDispatcher("2s-12900k", execute=True)
+    got = disp.int8_gemm(a, w)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.int8_gemm_ref(a, w)))
+
+
+def test_topology_f32_matmul_shard_exact_and_matches_flat():
+    w = RNG.normal(size=(96, 64)).astype(np.float32)
+    x = jnp.asarray(RNG.normal(size=(4, 64)).astype(np.float32))
+    topo_disp = TopologyDispatcher("ultra-125h", execute=True)  # 1 socket
+    flat_disp = HybridKernelDispatcher.virtual("ultra-125h", execute=True)
+    got = np.asarray(topo_disp.f32_matmul(x, w))
+    np.testing.assert_allclose(got, np.asarray(x) @ w.T, rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(got, np.asarray(flat_disp.f32_matmul(x, w)))
+
+
+def test_oblivious_kernels_still_correct():
+    """The penalty inflates modelled time, never the computed values."""
+    x = jnp.asarray(RNG.normal(size=(2, 64)).astype(np.float32))
+    w = RNG.normal(size=(48, 64)).astype(np.float32)
+    disp = TopologyDispatcher("dual-125h", socket_local=False, execute=True)
+    np.testing.assert_allclose(np.asarray(disp.f32_matmul(x, w)),
+                               np.asarray(x) @ w.T, rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------------- placement ---
+def test_place_rows_proportional_and_contiguous():
+    ranges = place_rows(100, [0.5, 0.5])
+    assert ranges == ((0, 50), (50, 100))
+    r3 = place_rows(90, [2 / 3, 1 / 3])
+    assert r3[0][1] - r3[0][0] == 60 and r3[1][1] - r3[1][0] == 30
+
+
+def test_register_placement_validates_ranges():
+    disp = TopologyDispatcher("dual-125h")
+    w = np.zeros((10, 4), np.float32)
+    with pytest.raises(ValueError, match="contiguous"):
+        disp.register_placement(w, [(0, 5), (6, 10)])  # gap
+    with pytest.raises(ValueError, match="one range per socket"):
+        disp.register_placement(w, [(0, 10)])
+    disp.register_placement(w, [(0, 4), (4, 10)])
+    assert disp.placement_for(w, 10) == ((0, 4), (4, 10))
+
+
+def test_remote_streaming_pays_the_fabric_penalty():
+    """Dispatching a range entirely resident on the other socket costs
+    cross_socket_penalty per byte; local streaming costs 1."""
+    disp = TopologyDispatcher("dual-125h")
+    placement = ((0, 100), (100, 200))
+    assert disp._work_scale(GEMV_ISA, 0, (0, 100), placement) == 1.0
+    assert disp._work_scale(GEMV_ISA, 1, (0, 100), placement) \
+        == pytest.approx(1.8)
+    assert disp._work_scale(GEMV_ISA, 1, (50, 150), placement) \
+        == pytest.approx(1.4)
+    # compute-bound regions stream comparatively few bytes: no penalty
+    assert disp._work_scale("avx_vnni", 1, (0, 100), placement) == 1.0
+
+
+def test_misplaced_weights_lower_achieved_bandwidth():
+    """A weight pinned entirely to socket 0 forces socket 1's share across
+    the fabric; the achieved fraction must honestly drop."""
+    def frac(misplace):
+        disp = TopologyDispatcher("dual-125h")
+        w = np.zeros((4096, 1), np.float32)  # identity key only
+        if misplace:
+            disp.register_placement(w, [(0, 4096), (4096, 4096)])
+        for i in range(30):
+            if i == 15:
+                disp.reset_bandwidth_accounting()
+            disp.dispatch(GEMV_SPEC, 4096, bytes_per_unit=4096 * 0.5625,
+                          weight=w)
+        return disp.achieved_bandwidth_fraction()
+
+    good, bad = frac(False), frac(True)
+    assert good >= 0.90
+    assert bad < good - 0.1
+
+
+def test_place_trunk_pins_every_banked_weight():
+    from repro.configs import reduced_config
+    from repro.models import BalancedTrunk, init_params
+
+    cfg = reduced_config("granite-8b")
+    params = init_params(cfg, jax.random.key(0))
+    disp = TopologyDispatcher("dual-125h", execute=True)
+    trunk = BalancedTrunk.from_params(cfg, params, disp, quant="q4")
+    placement = place_trunk(trunk)
+    n_banked = sum(len(v) for v in trunk.bank.values()) + 1  # + head
+    assert placement.n_layers == n_banked
+    assert len(disp._placement) == n_banked
+    np.testing.assert_allclose(placement.socket_bytes / placement.total_bytes,
+                               placement.shares, atol=0.05)
+    assert any("resident" in line for line in placement.lines())
+
+
+def test_place_trunk_requires_topology_dispatcher():
+    from repro.configs import reduced_config
+    from repro.models import BalancedTrunk, init_params
+
+    cfg = reduced_config("granite-8b")
+    params = init_params(cfg, jax.random.key(0))
+    flat = HybridKernelDispatcher.virtual("ultra-125h", execute=True)
+    trunk = BalancedTrunk.from_params(cfg, params, flat, quant="fp32")
+    with pytest.raises(ValueError, match="TopologyDispatcher"):
+        place_trunk(trunk)
+    oblivious = TopologyDispatcher("dual-125h", socket_local=False,
+                                   execute=True)
+    trunk2 = BalancedTrunk.from_params(cfg, params, oblivious, quant="fp32")
+    with pytest.raises(ValueError, match="oblivious"):
+        place_trunk(trunk2)
+
+
+# ----------------------------------------------------- engine integration --
+def _topology_engine(machine="dual-125h", quant="fp32", topology=None,
+                     n_requests=3, steps=4):
+    from repro.configs import reduced_config
+    from repro.models import BalancedTrunk, init_params
+    from repro.serving import (
+        ContinuousBatchingEngine,
+        HybridPhaseCost,
+        poisson_requests,
+    )
+
+    cfg = reduced_config("granite-8b")
+    params = init_params(cfg, jax.random.key(0))
+    disp = TopologyDispatcher(machine, execute=True)
+    trunk = BalancedTrunk.from_params(cfg, params, disp, quant=quant)
+    engine = ContinuousBatchingEngine(
+        cfg, params, max_slots=2, max_seq=16, prefill_chunk=4,
+        cost_model=HybridPhaseCost(machine), balanced_trunk=trunk,
+        topology=topology)
+    requests = poisson_requests(n_requests, rate=100.0,
+                                vocab_size=cfg.vocab_size,
+                                prompt_len=6, max_new_tokens=steps, seed=0)
+    for r in requests:
+        engine.submit(r)
+    engine.run_until_idle()
+    return engine, requests, disp
+
+
+def test_engine_adopts_and_places_topology_trunk():
+    engine, requests, disp = _topology_engine()
+    assert all(len(r.generated) == 4 for r in requests)
+    assert engine.topology is disp.topology
+    assert engine.placement is not None and engine.placement.n_layers > 0
+    # both levels learned decode-phase keys from real dispatches
+    assert "membw/attn_proj" in disp.table.keys()
+    assert "membw/attn_proj" in disp.socket_dispatchers[0].table.keys()
+    assert disp.achieved_bandwidth(GEMV_ISA) > 0
+    for s in range(disp.n_sockets):
+        assert disp.achieved_bandwidth(GEMV_ISA, socket=s) > 0
+
+
+def test_engine_topology_name_validation():
+    engine, _, _ = _topology_engine(topology="dual-125h")
+    assert engine.topology.name == "dual-125h"
+    with pytest.raises(ValueError, match="balanced over"):
+        _topology_engine(topology="2s-12900k")
+
+
+def test_engine_topology_requires_topology_trunk():
+    from repro.configs import reduced_config
+    from repro.models import init_params
+    from repro.serving import ContinuousBatchingEngine
+
+    cfg = reduced_config("granite-8b")
+    params = init_params(cfg, jax.random.key(0))
+    with pytest.raises(ValueError, match="TopologyDispatcher"):
+        ContinuousBatchingEngine(cfg, params, max_slots=2, max_seq=16,
+                                 topology="dual-125h")
+
+
+def test_phase_cost_accepts_topology_as_flattened_clock():
+    from repro.serving import HybridPhaseCost
+
+    cost = HybridPhaseCost("dual-125h")
+    assert cost.machine.n_cores == 28
+    assert cost.machine.socket_bandwidth == pytest.approx(
+        make_topology("dual-125h").aggregate_bandwidth)
+    assert cost.decode_seconds(2, ctx=8) > 0
