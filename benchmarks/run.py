@@ -13,10 +13,12 @@ import sys
 def main() -> None:
     from . import bench_gemm_parallel, bench_gemv_bandwidth, bench_e2e
     from . import bench_ratio_trace, bench_kernels, bench_serving
+    from . import bench_fleet
 
     rows = []
     for mod in (bench_gemm_parallel, bench_gemv_bandwidth, bench_e2e,
-                bench_ratio_trace, bench_kernels, bench_serving):
+                bench_ratio_trace, bench_kernels, bench_serving,
+                bench_fleet):
         rows += mod.run()
 
     print("name,us_per_call,derived")
@@ -51,6 +53,10 @@ def main() -> None:
          grab("fig3_prefill_dynamic_ultra-125h", "vs_llamacpp_x")),
         ("decode tokens/s (~16)", "16",
          grab("fig3_decode_dynamic_ultra-125h", "tok_s")),
+        ("fleet learned vs round-robin goodput", ">0%",
+         grab("fleet_margin", "learned_vs_rr_pct")),
+        ("fleet learned vs best static goodput", ">0%",
+         grab("fleet_margin", "learned_vs_best_static_pct")),
     ]
     for label, paper, ours in checks:
         print(f"# {label}: paper={paper} ours={ours}")

@@ -1,0 +1,190 @@
+"""Cluster model: named heterogeneous nodes under one virtual clock.
+
+A :class:`Node` is one machine of the fleet — a
+:class:`~repro.topology.MachineTopology` (multi-socket, flat, or a
+throttled box) running one
+:class:`~repro.serving.ContinuousBatchingEngine` replica per socket,
+each clocked by a :class:`~repro.serving.HybridPhaseCost` over that
+socket's simulated cores, and routed internally by an
+:class:`~repro.serving.InflightDispatcher`.  A node is therefore itself
+a two-level balancing domain (socket -> core); the
+:class:`~repro.fleet.router.FleetRouter` adds the third level on top.
+
+The :class:`Cluster` clock is the slowest node's engine clock — nodes
+run concurrently, so fleet time is ``max`` over node times, exactly the
+dispatcher-over-replicas convention one level down.  All time is virtual
+(deterministic), so fleet runs are exactly reproducible.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.serving import (
+    ContinuousBatchingEngine,
+    HybridPhaseCost,
+    InflightDispatcher,
+    Request,
+)
+from repro.serving.scheduler import IterationStats
+from repro.topology import MachineTopology, make_topology
+
+__all__ = ["NodeSpec", "Node", "Cluster"]
+
+_FOREVER = (0.0, 1e18)
+
+
+@dataclass(frozen=True)
+class NodeSpec:
+    """Declarative description of one fleet node.
+
+    ``topology`` is a topology/machine name (``"dual-125h"``,
+    ``"2s-12900k"``, ``"ultra-125h"``, ...) or a ready
+    :class:`MachineTopology`.  ``throttle > 1`` applies a permanent
+    background slowdown to every core — the "throttled box" whose
+    *nominal* capacity (what static partitioning sees) stays high while
+    its real throughput is ``1/throttle`` of it.
+    """
+
+    name: str
+    topology: Union[str, MachineTopology]
+    max_slots: int = 4
+    prefill_chunk: Optional[int] = 8
+    prefill_lanes: int = 1
+    throttle: float = 1.0
+
+    def __post_init__(self) -> None:
+        if self.throttle < 1.0:
+            raise ValueError("throttle must be >= 1 (1 = unthrottled)")
+
+
+class Node:
+    """One cluster node: per-socket engine replicas behind an in-node
+    dispatcher, plus the liveness switch the fleet's failure events flip."""
+
+    def __init__(self, spec: NodeSpec, cfg, params, *, max_seq: int,
+                 seed: int = 0, alpha: float = 0.3):
+        self.spec = spec
+        self.name = spec.name
+        topo = (make_topology(spec.topology, seed=seed)
+                if isinstance(spec.topology, str) else spec.topology)
+        self.topology = topo
+        if spec.throttle > 1.0:
+            # the throttle is background load on the *simulated machines*:
+            # both kernel timing and the virtual clock see it, nominal
+            # bandwidth numbers do not
+            for m in topo.machines:
+                for core in range(m.n_cores):
+                    m.background.append((*_FOREVER, core, spec.throttle))
+        self.engines = [
+            ContinuousBatchingEngine(
+                cfg, params, max_slots=spec.max_slots, max_seq=max_seq,
+                prefill_chunk=spec.prefill_chunk,
+                prefill_lanes=spec.prefill_lanes,
+                cost_model=HybridPhaseCost(machine))
+            for machine in topo.machines
+        ]
+        self.dispatcher = InflightDispatcher(self.engines, alpha=alpha)
+        self.active = True
+
+    # ------------------------------------------------------------- probes --
+    @property
+    def now(self) -> float:
+        return max(e.now for e in self.engines)
+
+    @property
+    def has_work(self) -> bool:
+        return self.dispatcher.has_work
+
+    @property
+    def pending_prefill_tokens(self) -> int:
+        return self.dispatcher.pending_prefill_tokens
+
+    @property
+    def queue_depth(self) -> int:
+        return self.dispatcher.queue_depth
+
+    @property
+    def nominal_capacity(self) -> float:
+        """Aggregate streaming bandwidth on paper — what a static
+        capacity-share partition weights by.  Deliberately blind to
+        ``throttle``: nominal numbers don't know about background load
+        (that asymmetry is the fleet study's point)."""
+        return self.topology.aggregate_bandwidth
+
+    # ------------------------------------------------------------ serving --
+    def submit(self, request: Request) -> tuple:
+        if not self.active:
+            raise ValueError(f"node {self.name!r} is failed")
+        return self.dispatcher.submit(request)
+
+    def step(self) -> List[IterationStats]:
+        if not self.active:
+            return []
+        return self.dispatcher.step()
+
+    def poll_finished(self) -> List[Request]:
+        return self.dispatcher.poll_finished()
+
+    # ------------------------------------------------------------ failure --
+    def fail(self) -> List[Request]:
+        """Drain the node: still-WAITING requests are extracted (they never
+        executed — the retry-able half, returned for resubmission
+        elsewhere), admitted requests are aborted (their cache state dies
+        with the node).  The node stops stepping and reporting."""
+        self.active = False
+        requeued: List[Request] = []
+        for e in self.engines:
+            requeued.extend(e.steal_waiting())
+            for r in e.outstanding():   # lanes + decode batch
+                e.abort(r)
+        requeued.sort(key=lambda r: r.arrival_time)
+        return requeued
+
+    def recover(self) -> None:
+        self.active = True
+
+
+class Cluster:
+    """Named nodes under one fleet clock."""
+
+    def __init__(self, nodes: Sequence[Node]):
+        if not nodes:
+            raise ValueError("need at least one node")
+        names = [n.name for n in nodes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate node names: {names}")
+        self.nodes = list(nodes)
+        self.by_name: Dict[str, Node] = {n.name: n for n in self.nodes}
+
+    @classmethod
+    def build(cls, specs: Sequence[NodeSpec], cfg, params, *, max_seq: int,
+              seed: int = 0, alpha: float = 0.3) -> "Cluster":
+        """One shared model (cfg, params) across all nodes — engines with
+        identical shapes share jit caches, so a 6-socket fleet compiles
+        once.  Node ``i`` seeds its topology ``seed + i`` (distinct jitter
+        streams)."""
+        return cls([Node(spec, cfg, params, max_seq=max_seq, seed=seed + i,
+                         alpha=alpha)
+                    for i, spec in enumerate(specs)])
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.nodes)
+
+    @property
+    def now(self) -> float:
+        """Fleet clock: slowest node (nodes run concurrently)."""
+        return max(n.now for n in self.nodes)
+
+    @property
+    def has_work(self) -> bool:
+        return any(n.active and n.has_work for n in self.nodes)
+
+    def nominal_shares(self) -> np.ndarray:
+        caps = np.array([n.nominal_capacity for n in self.nodes],
+                        dtype=np.float64)
+        return caps / caps.sum()

@@ -43,6 +43,7 @@ callback — it falls back to direct eager shard-wise execution.
 from __future__ import annotations
 
 import functools
+import os
 import time
 from typing import Callable, Dict, Optional
 
@@ -50,6 +51,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import io_callback
+
+# The jit bridge below runs ordered io_callbacks that themselves dispatch
+# jitted Pallas shard programs.  jax's CPU client executes programs on a
+# thread pool sized from the host CPU count; on a 1-2 CPU host the outer
+# program can hold every execution thread while its callback waits on the
+# nested shard program — a guaranteed deadlock.  Synchronous dispatch runs
+# each program on the calling thread instead, which composes with nesting,
+# so flip it where the pool is too small for the bridge to be safe.
+if (os.cpu_count() or 1) <= 2:
+    try:
+        jax.config.update("jax_cpu_enable_async_dispatch", False)
+    except (AttributeError, KeyError):  # jax without the flag
+        pass
 
 from repro.core.hybrid_sim import SimulatedHybridCPU, make_machine
 from repro.core.pool import SubTask, ThreadWorkerPool, VirtualWorkerPool

@@ -13,6 +13,12 @@ Modes:
   core dispatch); ``--machine wall`` uses real wall time.
 * ``--legacy-batch`` — the seed-era whole-batch path (one
   ``RoutedServer.serve_batch`` round), kept for migration comparisons.
+* ``--fleet`` — cluster-scale serving: a default heterogeneous fleet
+  (NUMA flagship + NUMA desktop + flat box + throttled box) behind the
+  recursive :class:`repro.fleet.FleetRouter`, driven by diurnal
+  heavy-tailed traffic with a mid-run node failure window.
+  ``--fleet-policy`` selects learned / round_robin / static routing and
+  ``--fleet-admission`` adds the SLO-aware front door.
 """
 
 from __future__ import annotations
@@ -57,6 +63,60 @@ def replica_slot_counts(batch: int, replicas: int) -> list:
     return [max(1, base + (1 if i < rem else 0)) for i in range(replicas)]
 
 
+def run_fleet_mode(args, cfg, params, max_seq: int) -> int:
+    """``--fleet``: the default heterogeneous 4-node cluster behind the
+    recursive FleetRouter, under diurnal heavy-tailed traffic with a
+    mid-run failure window on the largest node."""
+    from repro.fleet import (
+        AdmissionController,
+        Cluster,
+        FleetRouter,
+        NodeSpec,
+        failure_window,
+        fleet_requests,
+    )
+
+    specs = (
+        NodeSpec("big", "dual-125h", max_slots=args.batch, prefill_lanes=2),
+        NodeSpec("mid", "2s-12900k", max_slots=args.batch, prefill_lanes=2),
+        NodeSpec("flat", "ultra-125h", max_slots=args.batch),
+        NodeSpec("slow", "ultra-125h", max_slots=args.batch, throttle=3.0),
+    )
+    cluster = Cluster.build(specs, cfg, params, max_seq=max_seq,
+                            seed=args.seed)
+    admission = None
+    if args.fleet_admission:
+        admission = AdmissionController(queue_cap=6 * len(specs),
+                                        degrade_depth=3 * len(specs))
+    router = FleetRouter(cluster, policy=args.fleet_policy,
+                         slo_ttft=2.0, slo_tpot=0.25, admission=admission)
+    requests = fleet_requests(
+        args.requests, base_rate=args.rate, vocab_size=cfg.vocab_size,
+        prompt_len=(4, args.prompt_len), max_new_tokens=args.steps,
+        seed=args.seed)
+    # fail the flagship a quarter of the way through the expected span,
+    # bring it back past the halfway crest
+    span = args.requests / args.rate
+    events = failure_window("big", fail_at=0.25 * span,
+                            recover_at=0.6 * span)
+    done = router.run(requests, events)
+    report = LatencyReport.from_requests(done, slo_ttft=2.0, slo_tpot=0.25)
+    names = [n.name for n in cluster.nodes]
+    print(f"[serve] fleet {names} policy={args.fleet_policy} "
+          f"routed={router.routed.tolist()} requeued={router.n_requeued}")
+    for line in report.lines():
+        print(line)
+    print(f"[serve] node prefill ratios: "
+          f"{np.round(router.table.ratios(PREFILL), 3).tolist()}")
+    print(f"[serve] node decode  ratios: "
+          f"{np.round(router.table.ratios(DECODE), 3).tolist()}")
+    st = router.last_stats.get(DECODE)
+    if st is not None:
+        print(f"[serve] recursive decode stats: {len(st.children)} node "
+              f"domains under the fleet table")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-8b")
@@ -89,6 +149,16 @@ def main() -> int:
                     help="JSON path to warm-start/persist replica ratios")
     ap.add_argument("--legacy-batch", action="store_true",
                     help="run the seed-era whole-batch serve_batch path")
+    ap.add_argument("--fleet", action="store_true",
+                    help="serve on the default heterogeneous 4-node fleet "
+                         "through the recursive FleetRouter (diurnal "
+                         "traffic + mid-run failure window)")
+    ap.add_argument("--fleet-policy", default="learned",
+                    choices=["learned", "round_robin", "static"],
+                    help="fleet routing policy (with --fleet)")
+    ap.add_argument("--fleet-admission", action="store_true",
+                    help="enable SLO-aware admission control (queue cap, "
+                         "graceful degradation) in front of the fleet")
     ap.add_argument("--balanced-head", action="store_true",
                     help="run the LM head as balanced per-core Q4 Pallas "
                          "shards (hybrid kernel dispatch) instead of inside "
@@ -127,6 +197,13 @@ def main() -> int:
     params = init_params(cfg, jax.random.key(0))
     max_seq = args.prompt_len + args.steps + 8
     slot_counts = replica_slot_counts(args.batch, args.replicas)
+
+    if args.fleet:
+        if (args.legacy_batch or args.balanced_head or args.balanced_trunk
+                or args.topology):
+            raise SystemExit("--fleet is a standalone mode: the fleet owns "
+                             "its topologies and cost models")
+        return run_fleet_mode(args, cfg, params, max_seq)
 
     if args.legacy_batch:
         rng = np.random.default_rng(args.seed)

@@ -23,6 +23,7 @@ from .policy import (
     BalancePolicy,
     ProportionalPolicy,
     EvenPolicy,
+    RecursivePolicy,
     clamp_to_capacity,
 )
 from .balancer import RegionStats, StatsSink, ListSink, Region, Balancer
@@ -48,6 +49,7 @@ __all__ = [
     "BalancePolicy",
     "ProportionalPolicy",
     "EvenPolicy",
+    "RecursivePolicy",
     "clamp_to_capacity",
     "RegionStats",
     "StatsSink",

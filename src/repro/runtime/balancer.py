@@ -38,13 +38,21 @@ __all__ = [
 
 @dataclass
 class RegionStats:
-    """Telemetry for one balanced parallel region (any domain)."""
+    """Telemetry for one balanced parallel region (any domain).
+
+    ``children`` makes the record recursive: when the region's workers are
+    themselves balancing domains (a fleet routing over machines routing
+    over sockets routing over cores), each worker's latest own
+    :class:`RegionStats` is attached, so one emitted record carries the
+    whole hierarchy's state for that round.  Flat domains leave it empty.
+    """
 
     key: str
     counts: np.ndarray
     times: np.ndarray
     ratios: Optional[np.ndarray] = None  # table state after feedback
     bytes: float = 0.0                   # bytes moved by the region (0 = n/a)
+    children: tuple = ()                 # per-worker child RegionStats
 
     @property
     def kernel(self) -> str:  # seed-era alias (RegionStats.kernel)
@@ -158,10 +166,15 @@ class Balancer:
         accounting."""
         times = np.asarray(times, dtype=np.float64)
         ratios = self.policy.report(plan, times) if update else None
+        # Recursive domains (policies with a collect_children hook, e.g.
+        # RecursivePolicy) attach each worker's own latest RegionStats so
+        # the emitted record spans the whole hierarchy.
+        collect = getattr(self.policy, "collect_children", None)
         st = RegionStats(key=label or plan.key, counts=plan.counts,
                          times=times,
                          ratios=None if ratios is None else ratios.copy(),
-                         bytes=float(bytes_moved))
+                         bytes=float(bytes_moved),
+                         children=() if collect is None else tuple(collect()))
         if self.keep_stats:
             self.stats.append(st)
         if self.sink is not None:

@@ -14,7 +14,7 @@ lifecycle on top.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Protocol, runtime_checkable
+from typing import Callable, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
@@ -27,6 +27,7 @@ __all__ = [
     "BalancePolicy",
     "ProportionalPolicy",
     "EvenPolicy",
+    "RecursivePolicy",
     "clamp_to_capacity",
 ]
 
@@ -118,6 +119,64 @@ class ProportionalPolicy:
     def report(self, plan: Plan, times) -> np.ndarray:
         units = np.asarray(plan.counts) if self.feedback == "units" else None
         return self.table.update(self.key, times, units=units)
+
+
+@dataclass
+class RecursivePolicy:
+    """Eq. 2/3 over workers that are themselves balancing domains.
+
+    The recursive hierarchy (fleet -> machine -> socket -> core) runs the
+    same control law at every level; what changes at an inner node is only
+    that each "worker" of its table is a whole Balancer-backed dispatcher
+    with its own table underneath.  Planning and feedback are exactly
+    :class:`ProportionalPolicy` (``units=`` feedback by default — realized
+    per-worker work, robust to clamped plans); the recursion shows up in
+    telemetry: ``collect_children()`` snapshots each child domain's latest
+    own :class:`~repro.runtime.balancer.RegionStats`, which
+    :meth:`~repro.runtime.balancer.Balancer.report` attaches to the
+    emitted record (``RegionStats.children``), so one report at the top
+    carries the ratio state of every level below it.
+
+    ``children`` is a sequence of zero-argument callables, one per worker,
+    each returning that worker's latest ``RegionStats`` (or ``None`` when
+    it has not reported yet — those are simply omitted).
+    """
+
+    table: RatioTable
+    key: str
+    children: Sequence[Callable[[], object]] = ()
+    granularity: int = 1
+    min_per_worker: int = 0
+    feedback: str = "units"
+
+    def __post_init__(self) -> None:
+        self._inner = ProportionalPolicy(
+            self.table, key=self.key, granularity=self.granularity,
+            min_per_worker=self.min_per_worker, feedback=self.feedback)
+        if self.children and len(self.children) != self.table.n_workers:
+            raise ValueError(
+                f"{len(self.children)} children for "
+                f"{self.table.n_workers} workers")
+
+    @property
+    def n_workers(self) -> int:
+        return self.table.n_workers
+
+    def plan(self, total: int) -> Plan:
+        return self._inner.plan(total)
+
+    def report(self, plan: Plan, times) -> np.ndarray:
+        return self._inner.report(plan, times)
+
+    def collect_children(self) -> list:
+        """Latest per-worker child RegionStats (non-reporting children are
+        dropped; order follows the worker order of those that reported)."""
+        out = []
+        for probe in self.children:
+            st = probe()
+            if st is not None:
+                out.append(st)
+        return out
 
 
 @dataclass

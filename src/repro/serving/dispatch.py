@@ -23,11 +23,11 @@ the EMA (``units=`` feedback).
 
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.runtime import Plan, RatioTable, StatsSink
+from repro.runtime import Plan, RatioTable, RegionStats, StatsSink
 
 from .engine import ContinuousBatchingEngine
 from .phases import DECODE, PREFILL, phase_balancers
@@ -56,6 +56,31 @@ class InflightDispatcher:
         # until at least two replicas have measurements (see step())
         self._acc = {phase: (np.zeros(n, dtype=np.int64), np.zeros(n))
                      for phase in (PREFILL, DECODE)}
+        # replica liveness: deactivated replicas are skipped by routing and
+        # stepping and masked out of EMA feedback (see set_active)
+        self.active = np.ones(n, dtype=bool)
+        # latest emitted per-phase RegionStats — the child-telemetry probe
+        # a recursive parent balancer snapshots (RegionStats.children)
+        self.last_stats: Dict[str, RegionStats] = {}
+
+    # ----------------------------------------------------------- liveness --
+    def set_active(self, i: int, active: bool = True) -> None:
+        """Mark replica ``i`` failed (or recovered).  Deactivation clears
+        the replica's windowed feedback accumulators: a replica that shed
+        or died mid-window has *partial* (units, seconds) sums that would
+        otherwise ride into a later multi-replica report and EMA-drag its
+        ratio via a stale ``units=`` measurement — the same
+        absence-of-measurement rule :attr:`~repro.runtime.RegionStats.
+        measured` applies to zero-count workers (its entries then sit at
+        (0, 0.0) and the table's ``units > 0`` mask carries its ratio
+        over unchanged)."""
+        if not 0 <= i < len(self.engines):
+            raise IndexError(f"replica {i} out of range")
+        self.active[i] = bool(active)
+        if not active:
+            for acc_u, acc_t in self._acc.values():
+                acc_u[i] = 0
+                acc_t[i] = 0.0
 
     # ------------------------------------------------------------ routing --
     def route(self, request: Request) -> int:
@@ -65,10 +90,14 @@ class InflightDispatcher:
         prompt + max_new_tokens, fall back to replicas that at least hold
         the prompt (generation then ends early at the cache edge, the
         engine's LENGTH semantics)."""
+        if not self.active.any():
+            raise ValueError("no active replica to route to")
         need = request.prompt_len + request.max_new_tokens
-        full = [e.max_seq >= need for e in self.engines]
+        full = [e.max_seq >= need and self.active[i]
+                for i, e in enumerate(self.engines)]
         if not any(full):
-            full = [e.max_seq >= request.prompt_len + 1 for e in self.engines]
+            full = [e.max_seq >= request.prompt_len + 1 and self.active[i]
+                    for i, e in enumerate(self.engines)]
         if not any(full):
             raise ValueError(
                 f"prompt of {request.prompt_len} tokens fits no replica "
@@ -94,10 +123,26 @@ class InflightDispatcher:
         rid = self.engines[i].submit(request)
         return i, rid
 
+    # ------------------------------------------------------------ probes --
+    @property
+    def pending_prefill_tokens(self) -> int:
+        """Aggregate prompt tokens queued across active replicas (the
+        fleet router's prefill-pressure signal for this dispatcher)."""
+        return sum(e.pending_prefill_tokens
+                   for i, e in enumerate(self.engines) if self.active[i])
+
+    @property
+    def queue_depth(self) -> int:
+        """Outstanding (waiting + prefilling + running) requests across
+        active replicas."""
+        return sum(e.queue_depth
+                   for i, e in enumerate(self.engines) if self.active[i])
+
     # ------------------------------------------------------------ driving --
     @property
     def has_work(self) -> bool:
-        return any(e.has_work for e in self.engines)
+        return any(e.has_work
+                   for i, e in enumerate(self.engines) if self.active[i])
 
     @property
     def now(self) -> float:
@@ -114,8 +159,10 @@ class InflightDispatcher:
         information (the table would carry it over anyway), but its solo
         rounds still count toward the next multi-replica comparison, so
         ratios keep learning even when replicas never work in the same
-        iteration."""
-        stats = [e.step() for e in self.engines]
+        iteration.  Deactivated replicas are not stepped and contribute
+        empty stats (units 0 -> masked out of the update)."""
+        stats = [e.step() if self.active[i] else IterationStats(now=e.now)
+                 for i, e in enumerate(self.engines)]
         for phase, units, times in (
             (PREFILL,
              np.array([s.prefill_tokens for s in stats], dtype=np.int64),
@@ -129,7 +176,7 @@ class InflightDispatcher:
             acc_t += times
             if (np.count_nonzero(acc_u) >= 2
                     or (len(self.engines) == 1 and acc_u.any())):
-                self._balancers[phase].report(
+                self.last_stats[phase] = self._balancers[phase].report(
                     Plan(counts=acc_u.copy(), key=phase), acc_t.copy())
                 acc_u[:] = 0
                 acc_t[:] = 0.0

@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import forward, init_state
+from repro.models.attention import KVCache
 from repro.runtime import (
     Balancer,
     DeviceRuntime,
@@ -46,6 +47,42 @@ from .phases import DECODE, PHASE_ISA, PREFILL, phase_kernel_key
 from .request import FinishReason, Request, RequestState
 from .scheduler import IterationScheduler, IterationStats
 from .slots import SlotCacheManager
+
+
+def _stack_lane_states(states):
+    """Stack per-lane batch-1 states into one B-row state pytree.
+
+    Every leaf carries the period-repeat axis first and the batch axis
+    second, so generic leaves concatenate along axis 1; KV caches need the
+    per-row index form — ``idx`` goes from (n_rep,) scalar-per-repeat to
+    (n_rep, B), the slot-batched convention ``attn_fwd`` already supports
+    (each lane appends at its own offset)."""
+
+    def comb(*leaves):
+        if isinstance(leaves[0], KVCache):
+            return KVCache(
+                k=jnp.concatenate([l.k for l in leaves], axis=1),
+                v=jnp.concatenate([l.v for l in leaves], axis=1),
+                idx=jnp.stack([l.idx for l in leaves], axis=1))
+        return jnp.concatenate(leaves, axis=1)
+
+    return jax.tree.map(comb, *states,
+                        is_leaf=lambda x: isinstance(x, KVCache))
+
+
+def _slice_lane_state(stacked, i: int):
+    """Row ``i`` of a lane-stacked state, back in batch-1 form (KV ``idx``
+    returns to its (n_rep,) scalar-per-repeat shape, so the row is adopt-
+    and restack-compatible with states from :func:`init_state`)."""
+
+    def pick(leaf):
+        if isinstance(leaf, KVCache):
+            return KVCache(k=leaf.k[:, i:i + 1], v=leaf.v[:, i:i + 1],
+                           idx=leaf.idx[:, i])
+        return leaf[:, i:i + 1]
+
+    return jax.tree.map(pick, stacked,
+                        is_leaf=lambda x: isinstance(x, KVCache))
 
 
 @dataclass
@@ -148,6 +185,7 @@ class ContinuousBatchingEngine:
 
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int,
                  max_seq: int, prefill_chunk: Optional[int] = None,
+                 prefill_lanes: int = 1,
                  sampler: Optional[Callable] = None, cost_model=None,
                  balanced_head=None, balanced_trunk=None, topology=None,
                  donate_state: bool = True):
@@ -156,6 +194,9 @@ class ContinuousBatchingEngine:
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.cost_model = cost_model
+        if prefill_lanes < 1:
+            raise ValueError("prefill_lanes must be >= 1")
+        self.prefill_lanes = prefill_lanes
         # Optional hybrid kernel dispatch of the LM head (see
         # models.balanced_lm_head): the jitted trunk stops before the head
         # and the decode-step Fp32-Int4-Fp32 GEMV runs as balanced per-core
@@ -183,7 +224,8 @@ class ContinuousBatchingEngine:
                       and (balanced_trunk is None
                            or balanced_trunk.head is None))
         self.manager = SlotCacheManager(cfg, max_slots, max_seq)
-        self.scheduler = IterationScheduler(prefill_chunk)
+        self.scheduler = IterationScheduler(prefill_chunk,
+                                            prefill_lanes=prefill_lanes)
         self.now = 0.0
         self.finished: List[Request] = []
         self._running: List[Request] = []
@@ -192,6 +234,7 @@ class ContinuousBatchingEngine:
         # donates its state argument, so the template stays intact).
         self._fresh_prefill_state = init_state(cfg, 1, max_seq)
         self._partial = None           # in-flight batch-1 prefill state
+        self._partials = {}            # request_id -> state (multi-lane)
         self._next_id = 0
         # (B,) greedy rows by default; a sampler sees (B, V) logits.
         self._pick = sampler or (lambda lg: jnp.argmax(lg, -1))
@@ -216,11 +259,26 @@ class ContinuousBatchingEngine:
                           trunk=trunk, trunk_isa=PHASE_ISA[DECODE])
             return out.logits[:, -1, :], out.state
 
+        def _prefill_lanes_fn(params, tokens, states, offsets):
+            # One batched trunk call over all active lanes: per-row cache
+            # offsets (each lane appends at its own position), then the
+            # rows split back into batch-1 partial states.
+            stacked = _stack_lane_states(states)
+            out = forward(cfg, params, tokens, state=stacked,
+                          pos_offset=offsets, logits_mode="last",
+                          apply_head=apply_head, trunk=trunk,
+                          trunk_isa=PHASE_ISA[PREFILL])
+            rows = [_slice_lane_state(out.state, i)
+                    for i in range(len(states))]
+            return out.logits[:, -1, :], rows
+
         if use_jit:
             _prefill = jax.jit(_prefill)
+            _prefill_lanes_fn = jax.jit(_prefill_lanes_fn)
             _decode = functools.partial(jax.jit, donate_argnums=donate)(_decode)
 
         self._prefill = _prefill
+        self._prefill_lanes = _prefill_lanes_fn
         self._decode = _decode
 
     @staticmethod
@@ -252,6 +310,18 @@ class ContinuousBatchingEngine:
 
     def _head(self, hidden: jax.Array, phase: str) -> jax.Array:
         """Apply the (possibly balanced) LM head to (B, d) hidden states."""
+        if self.balanced_head is not None or (
+                self.balanced_trunk is not None
+                and self.balanced_trunk.head is not None):
+            # The trunk step is dispatched asynchronously and its ordered
+            # io_callbacks run on a jax runtime thread; the eager balanced
+            # head launches its own shard programs from this thread.  On
+            # the CPU client the two can starve each other out of
+            # execution threads (the head's program holds one while
+            # data-waiting on ``hidden``, the callback's inner shards
+            # can't get one, the trunk can't finish without the callback)
+            # — so drain the in-flight step before dispatching host work.
+            jax.block_until_ready(hidden)
         if self.balanced_head is not None:
             return self.balanced_head(hidden, isa=PHASE_ISA[phase])
         if self.balanced_trunk is not None and self.balanced_trunk.head is not None:
@@ -285,17 +355,39 @@ class ContinuousBatchingEngine:
 
     @property
     def n_prefilling(self) -> int:
-        return int(self.scheduler.prefilling is not None)
+        return len(self.scheduler.lanes)
 
     @property
     def pending_prefill_tokens(self) -> int:
         """Prompt tokens queued ahead of a newly routed request (the
         dispatcher's prefill-pressure signal)."""
         pending = sum(r.prompt_len for r in self.scheduler.waiting)
-        if self.scheduler.prefilling is not None:
-            req = self.scheduler.prefilling
-            pending += req.prompt_len - req.prefill_done
+        pending += sum(r.prompt_len - r.prefill_done
+                       for r in self.scheduler.lanes)
         return pending
+
+    @property
+    def queue_depth(self) -> int:
+        """Outstanding requests at every pre-finish stage (waiting +
+        prefilling + running) — the admission controller's load probe."""
+        return self.n_running + self.n_prefilling + self.n_waiting
+
+    def outstanding(self) -> List[Request]:
+        """Every request currently owned by the engine (queue, prefill
+        lane(s), decode batch) — what a failing node must drain."""
+        out = list(self.scheduler.waiting)
+        out.extend(self.scheduler.lanes)
+        out.extend(self._running)
+        return out
+
+    def steal_waiting(self) -> List[Request]:
+        """Remove and return all still-WAITING requests (they never
+        executed, so they can be resubmitted elsewhere verbatim — the
+        retry-able half of a node drain; admitted requests have cache
+        state here and must be aborted instead)."""
+        out = list(self.scheduler.waiting)
+        self.scheduler.waiting.clear()
+        return out
 
     def poll_finished(self) -> List[Request]:
         """Drain and return requests finished since the last poll."""
@@ -315,10 +407,9 @@ class ContinuousBatchingEngine:
             except ValueError:
                 raise ValueError("request is not queued in this engine")
         elif request.state is RequestState.PREFILL:
-            if sched.prefilling is not request:
-                raise ValueError("request is not prefilling in this engine")
-            sched.prefilling = None
+            sched.remove_lane(request)  # raises when not prefilling here
             self._partial = None
+            self._partials.pop(request.request_id, None)
             man.release(request.slot)
             request.slot = None
         elif request.state is RequestState.RUNNING:
@@ -341,12 +432,13 @@ class ContinuousBatchingEngine:
         man, sched = self.manager, self.scheduler
 
         # Idle fast-forward: nothing to run until the next arrival.
-        if (not self._running and sched.prefilling is None
+        if (not self._running and not sched.lanes
                 and sched.waiting and not sched.n_waiting(self.now)):
             self.now = max(self.now, sched.waiting[0].arrival_time)
 
-        chunk = sched.next_prefill(self.now, man.n_free > 0)
-        if chunk is not None:
+        chunks = sched.next_prefill(self.now, man.n_free)
+        if chunks and self.prefill_lanes == 1:
+            chunk = chunks[0]
             req = chunk.request
             if req.slot is None:  # newly admitted: reserve the slot now
                 req.slot = man.allocate()
@@ -388,6 +480,8 @@ class ContinuousBatchingEngine:
                 self._maybe_finish(req, tok, st)
             else:
                 self._partial = small
+        elif chunks:
+            self._step_prefill_lanes(chunks, st)
 
         if self._running:
             tok = jnp.asarray(man.last_token[:, None])
@@ -415,6 +509,65 @@ class ContinuousBatchingEngine:
         st.n_waiting = self.scheduler.n_waiting()
         st.now = self.now
         return st
+
+    def _step_prefill_lanes(self, chunks, st: IterationStats) -> None:
+        """Multi-lane prefill: all active lanes advance by one shared-length
+        chunk through a *single* batched trunk call (per-row cache offsets),
+        instead of one batch-1 call per prompt — the GEMM over B*L rows is
+        what the balanced per-core split wants to see.  Token-identical to
+        the batch-1 path: rows of a matmul are independent and each lane's
+        cache rows are its own."""
+        man, sched = self.manager, self.scheduler
+        for c in chunks:
+            req = c.request
+            if req.slot is None:  # newly admitted: reserve the slot now
+                req.slot = man.allocate()
+                req.state = RequestState.PREFILL
+                req.admit_time = self.now
+                self._partials[req.request_id] = self._fresh_prefill_state
+        length = chunks[0].length
+        tokens = jnp.asarray(np.stack(
+            [np.asarray(c.request.prompt[c.start:c.start + length])
+             for c in chunks]))
+        offsets = jnp.asarray(
+            np.array([c.start for c in chunks], dtype=np.int32))
+        states = [self._partials[c.request.request_id] for c in chunks]
+        t0 = time.perf_counter()
+        logits, rows = self._prefill_lanes(self.params, tokens, states,
+                                           offsets)
+        finishing = [i for i, c in enumerate(chunks) if c.is_last]
+        picked = None
+        if finishing:  # head + sampling inside the timed window (TTFT)
+            picked = np.asarray(
+                self._pick(self._head(logits, PREFILL))).reshape(-1)
+        if self.cost_model is None:
+            logits.block_until_ready()
+            dt = time.perf_counter() - t0
+        else:
+            # one parallel region over all lanes' tokens: the batched call
+            # is what splits across cores, so it is timed as one chunk
+            dt = self.cost_model.prefill_seconds(
+                length * len(chunks),
+                ctx=max(c.start + length for c in chunks))
+        self.now += dt
+        st.prefill_tokens = length * len(chunks)
+        st.prefill_seconds = dt
+        for i, c in enumerate(chunks):
+            req = c.request
+            req.prefill_done += length
+            sched.prefill_advanced(c)
+            if c.is_last:
+                tok = int(picked[i])
+                self._partials.pop(req.request_id, None)
+                req.generated.append(tok)
+                req.first_token_time = self.now
+                man.adopt(req.slot, rows[i], req.prompt_len, tok)
+                req.state = RequestState.RUNNING
+                self._running.append(req)
+                st.admitted.append(req.request_id)
+                self._maybe_finish(req, tok, st)
+            else:
+                self._partials[req.request_id] = rows[i]
 
     def _maybe_finish(self, req: Request, tok: int, st: IterationStats) -> None:
         stopped = req.stop_token is not None and tok == req.stop_token

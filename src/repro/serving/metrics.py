@@ -40,6 +40,8 @@ class LatencyReport:
     ttft: Dict[int, float]           # percentile -> seconds
     tpot: Dict[int, float]
     goodput: float                   # SLO-meeting finished requests / second
+    n_shed: int = 0                  # rejected by admission, never executed
+    n_degraded: int = 0              # served with admission-shrunk budgets
 
     @classmethod
     def from_requests(cls, requests: Sequence[Request], *,
@@ -47,10 +49,12 @@ class LatencyReport:
                       slo_ttft: Optional[float] = None,
                       slo_tpot: Optional[float] = None) -> "LatencyReport":
         done = [r for r in requests if r.finish_time is not None]
-        # aborted requests count as finished but never as served or as
-        # goodput: cancelling stragglers must not flatter the percentiles
+        # aborted and shed requests count as finished but never as served
+        # or as goodput: cancelling stragglers (or rejecting arrivals at
+        # the door) must not flatter the percentiles
         served = [r for r in done
-                  if r.finish_reason is not FinishReason.ABORTED
+                  if r.finish_reason not in (FinishReason.ABORTED,
+                                             FinishReason.SHED)
                   and r.ttft is not None]
         if duration is None:
             t0 = min((r.arrival_time for r in requests), default=0.0)
@@ -74,6 +78,9 @@ class LatencyReport:
             tpot=percentiles([r.tpot for r in served
                               if r.tpot is not None]),
             goodput=len(good) / duration if duration > 0 else 0.0,
+            n_shed=sum(1 for r in done
+                       if r.finish_reason is FinishReason.SHED),
+            n_degraded=sum(1 for r in served if r.degraded),
         )
 
     @property
@@ -86,10 +93,14 @@ class LatencyReport:
     def lines(self, prefix: str = "[serve]") -> list:
         fmt = lambda d: " ".join(
             f"p{p}={v * 1e3:.2f}ms" for p, v in sorted(d.items()))
+        extra = ""
+        if self.n_shed or self.n_degraded:
+            extra = f" (shed {self.n_shed}, degraded {self.n_degraded})"
         return [
             f"{prefix} finished {self.n_finished}/{self.n_requests} requests, "
             f"{self.generated_tokens} tokens in {self.duration:.3f}s "
-            f"({self.throughput:.1f} tok/s, goodput {self.goodput:.2f} req/s)",
+            f"({self.throughput:.1f} tok/s, goodput {self.goodput:.2f} req/s)"
+            f"{extra}",
             f"{prefix} ttft {fmt(self.ttft)}",
             f"{prefix} tpot {fmt(self.tpot)}",
         ]

@@ -35,6 +35,7 @@ class FinishReason(enum.Enum):
     LENGTH = "length"      # hit max_new_tokens
     STOP = "stop"          # sampled the stop token
     ABORTED = "aborted"    # cancelled / engine shut down before completion
+    SHED = "shed"          # rejected by admission control, never executed
 
 
 @dataclass(eq=False)  # identity semantics: prompts are arrays, ids are per-engine
@@ -51,6 +52,8 @@ class Request:
     request_id: int = -1                 # assigned by the engine at submit()
     arrival_time: float = 0.0            # engine-clock arrival (open loop)
     stop_token: Optional[int] = None
+    deadline: Optional[float] = None     # absolute clock bound for admission
+    degraded: bool = False               # max_new_tokens shrunk by admission
 
     # --- engine bookkeeping -------------------------------------------------
     state: RequestState = RequestState.WAITING

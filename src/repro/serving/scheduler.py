@@ -1,12 +1,12 @@
 """Iteration-level scheduling for the continuous-batching engine.
 
-One engine iteration = (at most one prefill chunk) + (one decode step for
-the whole persistent batch).  The scheduler decides *which* prompt tokens
-run in the prefill lane each iteration:
+One engine iteration = (one batched prefill call over the active lanes) +
+(one decode step for the whole persistent batch).  The scheduler decides
+*which* prompt tokens run in the prefill lane(s) each iteration:
 
 * Admission is arrival-ordered FIFO (deterministic): a waiting request is
-  admitted as soon as it has arrived (``arrival_time <= now``) and a slot
-  is free.
+  admitted as soon as it has arrived (``arrival_time <= now``), a slot is
+  free, and a prefill lane (of ``prefill_lanes``, default 1) is open.
 * Prefill is optionally *chunked* (``prefill_chunk``): long prompts are
   consumed up to ``chunk`` tokens per iteration so running decodes are
   never starved behind a long prompt — the usual continuous-batching
@@ -14,6 +14,11 @@ run in the prefill lane each iteration:
   Chunk lengths are bucketed to powers of two so the engine's jitted
   prefill compiles at most ``log2(prefill_chunk) + 1`` shapes, no matter
   how prompt lengths vary (decode already has one static shape).
+* With ``prefill_lanes > 1`` every active lane advances by the *same*
+  chunk length each iteration (the minimum of the per-lane bucketed
+  lengths — a min of powers of two is itself a power of two, so the
+  bounded-shape-set property survives): the engine then runs all lanes
+  as one batched trunk call instead of one call per prompt.
 
 The scheduler is pure host-side bookkeeping; the engine owns all jitted
 execution and the slot state.
@@ -60,19 +65,31 @@ class IterationStats:
 
 
 class IterationScheduler:
-    """Admission queue + chunked-prefill cursor.
+    """Admission queue + chunked-prefill cursors.
 
-    At most one request is in the PREFILL state at a time; its prompt is
-    consumed chunk by chunk across iterations, interleaved with decode
-    steps of the running batch.
+    At most ``prefill_lanes`` requests are in the PREFILL state at a time
+    (default 1, the classic single-lane engine); their prompts are consumed
+    chunk by chunk across iterations, interleaved with decode steps of the
+    running batch.
     """
 
-    def __init__(self, prefill_chunk: Optional[int] = None):
+    def __init__(self, prefill_chunk: Optional[int] = None,
+                 prefill_lanes: int = 1):
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
+        if prefill_lanes < 1:
+            raise ValueError("prefill_lanes must be >= 1")
         self.prefill_chunk = prefill_chunk
+        self.prefill_lanes = prefill_lanes
         self.waiting: Deque[Request] = deque()
-        self.prefilling: Optional[Request] = None
+        self.lanes: List[Request] = []   # admission order, PREFILL state
+
+    @property
+    def prefilling(self) -> Optional[Request]:
+        """Single-lane view: the oldest in-flight prefill (None when the
+        lane set is empty) — the pre-multi-lane attribute, kept for
+        callers of the classic one-lane engine."""
+        return self.lanes[0] if self.lanes else None
 
     # ------------------------------------------------------------- intake --
     def submit(self, request: Request) -> None:
@@ -94,33 +111,44 @@ class IterationScheduler:
 
     @property
     def has_work(self) -> bool:
-        return bool(self.waiting) or self.prefilling is not None
+        return bool(self.waiting) or bool(self.lanes)
 
     # ----------------------------------------------------------- per-step --
-    def next_prefill(self, now: float, slot_available: bool) -> Optional[PrefillChunk]:
-        """The prefill work for this iteration, admitting a new request from
-        the queue when the lane is idle and a slot is free."""
-        if self.prefilling is None:
-            if (not slot_available or not self.waiting
-                    or self.waiting[0].arrival_time > now):
-                return None
-            self.prefilling = self.waiting.popleft()
-        req = self.prefilling
+    def _desired_length(self, req: Request) -> int:
         remaining = req.prompt_len - req.prefill_done
         if self.prefill_chunk is None:
-            length = remaining
-        else:
-            # largest power of two <= min(chunk, remaining): a bounded
-            # shape set for the jitted prefill (one-shot mode instead
-            # compiles per distinct prompt length, the caller's trade)
-            length = min(self.prefill_chunk, remaining)
-            length = 1 << (length.bit_length() - 1)
-        return PrefillChunk(request=req, start=req.prefill_done, length=length)
+            return remaining
+        # largest power of two <= min(chunk, remaining): a bounded
+        # shape set for the jitted prefill (one-shot mode instead
+        # compiles per distinct prompt length, the caller's trade)
+        length = min(self.prefill_chunk, remaining)
+        return 1 << (length.bit_length() - 1)
+
+    def next_prefill(self, now: float, free_slots: int) -> List[PrefillChunk]:
+        """The prefill work for this iteration — one chunk per active lane,
+        all of the same length, admitting arrived requests into open lanes
+        while ``free_slots`` allows (each new lane needs a decode slot)."""
+        free = int(free_slots)
+        while (len(self.lanes) < self.prefill_lanes and free > 0
+               and self.waiting and self.waiting[0].arrival_time <= now):
+            self.lanes.append(self.waiting.popleft())
+            free -= 1
+        if not self.lanes:
+            return []
+        length = min(self._desired_length(r) for r in self.lanes)
+        return [PrefillChunk(request=r, start=r.prefill_done, length=length)
+                for r in self.lanes]
 
     def prefill_advanced(self, chunk: PrefillChunk) -> None:
-        """Mark ``chunk`` as executed; frees the prefill lane on the last
-        chunk (the engine flips the request to RUNNING)."""
-        if chunk.request is not self.prefilling:
-            raise ValueError("chunk does not belong to the active prefill")
+        """Mark ``chunk`` as executed; frees its lane on the last chunk
+        (the engine flips the request to RUNNING)."""
+        if chunk.request not in self.lanes:
+            raise ValueError("chunk does not belong to an active prefill lane")
         if chunk.is_last:
-            self.prefilling = None
+            self.lanes.remove(chunk.request)
+
+    def remove_lane(self, request: Request) -> None:
+        """Drop an in-flight prefill (abort path)."""
+        if request not in self.lanes:
+            raise ValueError("request is not prefilling in this engine")
+        self.lanes.remove(request)
