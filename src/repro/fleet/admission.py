@@ -98,10 +98,20 @@ class AdmissionController:
                 continue
             ttft = (node.pending_prefill_tokens
                     + request.prompt_len) / max(pf[i], 1e-9)
-            # decode throughput is shared with everything already in the
-            # node, so the effective per-request rate divides by depth
-            tpot = (node.queue_depth + 1) / max(dec[i], 1e-9)
-            est = ttft + request.max_new_tokens * tpot
+            # Decode throughput is shared with everything already in the
+            # node, but only while those requests still owe tokens: an
+            # in-flight request contends for min(its remaining tokens,
+            # this request's lifetime).  Degraded admissions (clamped
+            # max_new_tokens) therefore shrink the estimate — backlog
+            # equals queue_depth * max_new_tokens (the old flat-depth
+            # model) only when every in-flight request outlives this one.
+            probe = getattr(node, "remaining_decode_tokens", None)
+            if callable(probe):
+                backlog = probe(cap=request.max_new_tokens)
+            else:
+                backlog = node.queue_depth * request.max_new_tokens
+            est = ttft + (request.max_new_tokens
+                          + backlog) / max(dec[i], 1e-9)
             if best is None or est < best:
                 best = est
         if best is None:

@@ -107,6 +107,20 @@ class Node:
     def queue_depth(self) -> int:
         return self.dispatcher.queue_depth
 
+    def remaining_decode_tokens(self, cap: Optional[int] = None) -> int:
+        """Decode tokens still owed to requests the node already owns
+        (waiting + prefilling + running), optionally capping each
+        request's remainder at ``cap``.  Degraded requests (clamped
+        ``max_new_tokens``) owe less — the admission controller's
+        deadline estimates read actual backlog instead of assuming every
+        in-flight request contends forever."""
+        total = 0
+        for e in self.engines:
+            for r in e.outstanding():
+                rem = max(0, r.max_new_tokens - r.n_generated)
+                total += min(rem, cap) if cap is not None else rem
+        return total
+
     @property
     def nominal_capacity(self) -> float:
         """Aggregate streaming bandwidth on paper — what a static

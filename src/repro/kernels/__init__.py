@@ -3,7 +3,8 @@
 ``<name>.py`` holds the pallas_call + BlockSpec kernels, ``ops.py`` the jit'd
 public wrappers (padding + tuner dispatch), ``ref.py`` the pure-jnp oracles,
 ``dispatch.py`` the hybrid per-core balanced shard dispatcher (the paper's
-runtime applied to these kernels).
+runtime applied to these kernels), ``compiled.py`` the zero-callback
+compiled lowering of balanced regions (offsets in, cost tape out).
 """
 
 from .ops import int8_gemm, int8_linear, q4_matmul, TunedMatmul
@@ -15,6 +16,7 @@ from .dispatch import (
     bridged_linear,
     kernel_key,
 )
+from .compiled import CompiledDispatcher, CompiledSpec
 from . import ref
 
 __all__ = [
@@ -29,4 +31,6 @@ __all__ = [
     "TRUNK_KINDS",
     "kernel_key",
     "bridged_linear",
+    "CompiledDispatcher",
+    "CompiledSpec",
 ]

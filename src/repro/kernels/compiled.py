@@ -1,0 +1,374 @@
+"""Compiled balanced decode: zero-callback shard lowering of the trunk.
+
+The io_callback bridge (:func:`~repro.kernels.dispatch.bridged_linear`)
+pays one Python round trip per projection of every decode step — the
+raw-speed ceiling ROADMAP names.  This module removes it while keeping the
+paper's measure -> EMA -> split loop intact, by splitting the loop across
+the jit boundary the way the paper splits it across the parallel region:
+
+* **Before the step** (host): the ratio table is planned once per call
+  site and materialized as device int32 boundary arrays — a
+  :class:`~repro.runtime.OffsetSnapshot` — passed *as arguments* into the
+  jitted step.  Balance is decided before the parallel work starts.
+* **Inside the step** (device): every projection lowers as ONE Pallas
+  grid over the full (M, N) output — no host shard loop, no callbacks.
+  Grid tiles map onto cores by the boundary array (core ``c`` owns output
+  rows ``[b[c], b[c+1])``); the Q4 decode GEMV additionally streams its
+  packed weight tiles through the double-buffered kernel
+  (:func:`~repro.kernels.q4_matmul.q4_matmul_pallas_db`), prefetching
+  tile ``k+1`` while tile ``k`` computes.  A per-shard cost accumulator —
+  the boundary differences, traced into the program — rides out of the
+  step as an extra output, so what the host learns from is what the
+  device actually executed.
+* **After the step** (host): :meth:`CompiledDispatcher.feedback` replays
+  each recorded region through the owning dispatcher's virtual worker
+  pools — same per-core time model, same Eq. 2 EMA updates, same
+  bytes/busy bandwidth accounting as the bridged path (two-level
+  socket-then-core for a :class:`~repro.topology.TopologyDispatcher`) —
+  and refreshes the snapshot for the next step.
+
+:class:`CompiledDispatcher` wraps a flat
+:class:`~repro.kernels.dispatch.HybridKernelDispatcher` or a
+:class:`~repro.topology.TopologyDispatcher` (duck-typed to avoid the
+package cycle) and is what :class:`~repro.models.balanced.BalancedTrunk`
+binds to in ``mode="compiled"``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.int8 import quantize_u8_dynamic, u8s8_matmul_decompose
+from repro.quant.q4 import BYTES_PER_ELEM, GROUP, QuantizedLinear
+from repro.runtime import KernelSpec, OffsetSnapshot, OffsetSpec, Plan
+
+from . import ops
+from .dispatch import GEMV_ISA, kernel_key
+from .q4_matmul import DEFAULT_BLOCKS as _Q4_DEFAULT
+from .q4_matmul import q4_matmul_pallas_db
+
+__all__ = ["CompiledDispatcher", "CompiledSpec", "q4_blocks"]
+
+# Per-kernel shard granularities, matching the bridged kernel entries
+# (HybridKernelDispatcher.q4_matmul/int8_gemm/f32_matmul defaults) so the
+# compiled and bridged paths plan over identical grain sizes.
+_GRANULARITY = {"q4_matmul": 8, "int8_gemm": 16, "f32_matmul": 1}
+
+
+def q4_blocks(k: int) -> tuple:
+    """The deterministic block config the compiled Q4 lowering pins for a
+    reduction dim ``k`` — DEFAULT_BLOCKS with the ops-layer bk fixup, so a
+    bridged trunk pinned to the same tuple is bit-identical."""
+    bm, bn, bk = _Q4_DEFAULT
+    if k % bk:
+        bk = GROUP
+        for cand in (1024, 512, 256, 128, 64, 32):
+            if k % cand == 0:
+                bk = cand
+                break
+    return (bm, bn, bk)
+
+
+@dataclass(frozen=True)
+class CompiledSpec:
+    """One registered compiled call site: everything the feedback replay
+    needs that is static at trace time.  ``name`` keys the offset snapshot
+    (and the tape's device records carry only ``spec_id`` — all other
+    fields are recovered host-side from this registry)."""
+
+    spec_id: int
+    name: str        # snapshot key: "<isa>/<kind>@<kernel>:<N>x<K>"
+    kernel: str      # "q4_matmul" | "int8_gemm" | "f32_matmul"
+    isa: str
+    key: str         # ratio-table key (kernel_key(isa, kind))
+    kind: str
+    n: int
+    k: int
+    granularity: int
+
+
+def _introspect(layer):
+    """(kernel, K, placement-registry weight object) for a balanced layer
+    (duck-typed on the bank classes' storage attributes)."""
+    qw = getattr(layer, "qw", None)
+    if qw is not None:  # BalancedQuantLinear
+        return "q4_matmul", qw.in_features, qw
+    w = getattr(layer, "w", None)
+    if w is None:
+        raise TypeError(f"not a balanced linear: {type(layer).__name__}")
+    if hasattr(w, "q"):  # BalancedLinear (QuantizedWeightI8)
+        return "int8_gemm", int(w.q.shape[1]), w.q
+    return "f32_matmul", int(w.shape[1]), w  # BalancedFp32Linear
+
+
+class CompiledDispatcher:
+    """Compiled (zero-callback) lowering + between-step feedback replay
+    over an existing balanced dispatcher.
+
+    One instance owns one :class:`OffsetSnapshot` (planned from the same
+    Balancers the bridged path uses, so compiled and bridged trunks share
+    ratio state), a spec registry, and the trace-time cost tape.  For a
+    socket-local topology dispatcher the snapshot concatenates per-socket
+    core plans (outer socket split first, then each socket's per-core
+    split), and feedback replays both levels — the two-level accounting is
+    preserved without any host work inside the step.
+    """
+
+    def __init__(self, dispatcher, *, double_buffer: bool = True):
+        self.dispatcher = dispatcher
+        self.double_buffer = double_buffer
+        sds = getattr(dispatcher, "socket_dispatchers", None)
+        self._topo = sds is not None and bool(getattr(
+            dispatcher, "socket_local", False))
+        self._oblivious = sds is not None and not self._topo
+        if self._topo:
+            self.interpret = dispatcher.socket_dispatchers[0].interpret
+            self._socket_cores = [d.n_workers
+                                  for d in dispatcher.socket_dispatchers]
+            self.n_workers = sum(self._socket_cores)
+        elif self._oblivious:
+            self.interpret = dispatcher.flat.interpret
+            self._socket_cores = None
+            self.n_workers = dispatcher.flat.n_workers
+        else:
+            self.interpret = dispatcher.interpret
+            self._socket_cores = None
+            self.n_workers = dispatcher.n_workers
+        self.snapshot = OffsetSnapshot(self._plan_counts)
+        self._specs: List[CompiledSpec] = []
+        self._by_name: Dict[str, CompiledSpec] = {}
+        self._weights: Dict[int, object] = {}    # spec_id -> placement handle
+        self._tape: Optional[list] = None
+
+    # -------------------------------------------------------- registration --
+    def spec_for(self, layer, isa: str, kind: str) -> CompiledSpec:
+        """The registered spec for one balanced layer under one (ISA,
+        kind) — created (and its offset spec registered) on first use."""
+        kernel, k, wobj = _introspect(layer)
+        n = int(layer.out_features)
+        key = kernel_key(isa, kind)
+        name = f"{key}@{kernel}:{n}x{k}"
+        spec = self._by_name.get(name)
+        if spec is not None:
+            if spec.kernel != kernel or spec.k != k:
+                raise ValueError(
+                    f"compiled spec {name!r} re-registered with a different "
+                    f"kernel/shape")
+            return spec
+        g = _GRANULARITY[kernel]
+        spec = CompiledSpec(spec_id=len(self._specs), name=name,
+                            kernel=kernel, isa=isa, key=key, kind=kind,
+                            n=n, k=k, granularity=g)
+        self._specs.append(spec)
+        self._by_name[name] = spec
+        self._weights[spec.spec_id] = wobj
+        self.snapshot.register(OffsetSpec(name=name, total=n, granularity=g))
+        return spec
+
+    # ------------------------------------------------------------ planning --
+    def _kernel_spec(self, spec: CompiledSpec, m: int) -> KernelSpec:
+        """The runtime KernelSpec for one replayed region (work model
+        identical to the bridged kernel entries)."""
+        if spec.kernel == "q4_matmul":
+            bpr = spec.k * BYTES_PER_ELEM
+            work = bpr if spec.isa == GEMV_ISA else 2.0 * m * spec.k
+        elif spec.kernel == "int8_gemm":
+            work = 2.0 * m * spec.k if spec.isa != GEMV_ISA else float(spec.k)
+        else:
+            bpr = 4.0 * spec.k
+            work = bpr if spec.isa == GEMV_ISA else 2.0 * m * spec.k
+        return KernelSpec(spec.kernel, isa=spec.isa,
+                          granularity=spec.granularity,
+                          work_per_unit=work, key=spec.key)
+
+    def _bytes_per_unit(self, spec: CompiledSpec) -> float:
+        if spec.kernel == "q4_matmul":
+            return spec.k * BYTES_PER_ELEM
+        if spec.kernel == "int8_gemm":
+            return float(spec.k)
+        return 4.0 * spec.k
+
+    def _plan_counts(self, ospec: OffsetSpec) -> np.ndarray:
+        """Snapshot planner: per-core counts from the current ratio state,
+        through the same cached Balancers the bridged path plans with."""
+        spec = self._by_name[ospec.name]
+        kspec = self._kernel_spec(spec, m=1)  # work model irrelevant to plan
+        if self._topo:
+            topo = self.dispatcher
+            outer = topo._balancer(kspec).plan(spec.n).counts
+            parts = [topo.socket_dispatchers[s]._balancer(kspec)
+                     .plan(int(c)).counts
+                     for s, c in enumerate(outer)]
+            return np.concatenate(parts)
+        flat = self.dispatcher.flat if self._oblivious else self.dispatcher
+        return flat._balancer(kspec).plan(spec.n).counts
+
+    def refresh(self) -> Dict[str, jax.Array]:
+        """Re-plan every registered call site from the current ratio
+        tables; returns the new device offset snapshot (pass it into the
+        next jitted step)."""
+        return self.snapshot.refresh()
+
+    # ----------------------------------------------------------- cost tape --
+    def tape_begin(self) -> list:
+        """Open the trace-time cost tape (call at the top of a traced step
+        function).  Every compiled projection traced until
+        :meth:`tape_end` appends its per-core shard sizes."""
+        self._tape = []
+        return self._tape
+
+    def tape_end(self, tape: list) -> list:
+        """Close the tape and return its records — make them an output of
+        the jitted step, then hand the concrete values to
+        :meth:`feedback` after the step runs."""
+        if tape is not self._tape:
+            raise RuntimeError("mismatched compiled cost tape")
+        self._tape = None
+        return list(tape)
+
+    def _record(self, spec: CompiledSpec, m: int, offsets) -> None:
+        src = offsets if offsets is not None else self.snapshot.device()
+        bounds = src[spec.name]
+        sizes = (bounds[1:] - bounds[:-1]).astype(jnp.int32)
+        if self._tape is not None:
+            self._tape.append({
+                "spec": jnp.asarray(spec.spec_id, jnp.int32),
+                "m": jnp.asarray(m, jnp.int32),
+                "sizes": sizes,
+            })
+
+    # ------------------------------------------------------- traced kernels --
+    def apply(self, layer, x: jax.Array, *, isa: str, kind: str,
+              offsets=None) -> jax.Array:
+        """One compiled balanced projection ``y = x @ W.T`` — fully
+        traceable: the real quantized kernels run as one monolithic grid,
+        the per-core boundaries from ``offsets`` (or the snapshot's
+        current device arrays) are folded into the cost tape."""
+        spec = self.spec_for(layer, isa, kind)
+        dtype = x.dtype
+        unflatten = x.ndim == 3
+        if unflatten:
+            b, s, _ = x.shape
+            x = x.reshape(b * s, x.shape[-1])
+        x32 = x.astype(jnp.float32)
+        if spec.kernel == "q4_matmul":
+            y = self._q4(x32, layer.qw, spec)
+        elif spec.kernel == "int8_gemm":
+            qa = quantize_u8_dynamic(x32)
+            acc = ops.int8_gemm(qa.q, layer.w.q, interpret=self.interpret)
+            y = u8s8_matmul_decompose(qa, layer.w, acc)
+        else:
+            # layer.w is a host numpy array; it constant-folds into each
+            # trace (caching the converted array would leak one trace's
+            # constant into the next).
+            y = x32 @ jnp.asarray(layer.w, jnp.float32).T
+        self._record(spec, int(x32.shape[0]), offsets)
+        y = y.astype(dtype)
+        return y.reshape(b, s, -1) if unflatten else y
+
+    def _q4(self, x: jax.Array, qw: QuantizedLinear,
+            spec: CompiledSpec) -> jax.Array:
+        blocks = q4_blocks(spec.k)
+        if not self.double_buffer:
+            return ops.q4_matmul(x, qw, blocks=blocks,
+                                 interpret=self.interpret)
+        bm, bn, _ = blocks
+        m, k = x.shape
+        n = qw.packed.shape[0]
+        mp, np_ = ops._round_up(m, bm), ops._round_up(n, bn)
+        out = q4_matmul_pallas_db(
+            ops._pad_to(x, mp, k),
+            QuantizedLinear(ops._pad_to(qw.packed, np_, k // 2),
+                            ops._pad_to(qw.scales, np_, k // GROUP)),
+            blocks=blocks, interpret=self.interpret)
+        return out[:m, :n]
+
+    # ------------------------------------------------------------ feedback --
+    def feedback(self, records, update: bool = True) -> Dict[str, jax.Array]:
+        """Replay one step's recorded regions through the dispatcher's
+        virtual pools — per-shard modelled times feed the Eq. 2 EMA
+        updates, bytes/busy accounting accrues exactly as the bridged path
+        would — then refresh the offset snapshot for the next step.
+        ``records`` is the (concrete) cost-tape output of the step."""
+        for rec in records:
+            spec = self._specs[int(np.asarray(rec["spec"]))]
+            m = int(np.asarray(rec["m"]))
+            counts = np.asarray(rec["sizes"], dtype=np.int64)
+            if int(counts.sum()) != spec.n:
+                raise ValueError(
+                    f"device shard sizes for {spec.name!r} cover "
+                    f"{int(counts.sum())} rows, expected {spec.n}")
+            if self._topo:
+                self._replay_topology(spec, m, counts, update)
+            else:
+                self._replay_flat(spec, m, counts, update)
+        return self.refresh()
+
+    def _replay_flat(self, spec: CompiledSpec, m: int, counts: np.ndarray,
+                     update: bool) -> None:
+        kspec = self._kernel_spec(spec, m)
+        plan = Plan(counts=counts, key=kspec.table_key,
+                    granularity=spec.granularity)
+        if self._oblivious:
+            topo = self.dispatcher
+            st = topo.flat.dispatch(
+                kspec, spec.n, None,
+                bytes_per_unit=self._bytes_per_unit(spec),
+                work_scale=topo._oblivious_scale(spec.isa),
+                update=update, plan=plan)
+            if topo.keep_stats:
+                topo.stats.append(st)
+            return
+        disp = self.dispatcher
+        # A threaded dispatcher has no time model to replay against (its
+        # bridged path measures real wall time, which the compiled step
+        # does not observe per shard) — keep accounting but skip updates.
+        model_ok = disp.machine is not None
+        disp.dispatch(kspec, spec.n, None,
+                      bytes_per_unit=self._bytes_per_unit(spec),
+                      update=update and model_ok, plan=plan)
+
+    def _replay_topology(self, spec: CompiledSpec, m: int,
+                         counts: np.ndarray, update: bool) -> None:
+        """Two-level replay: inner per-core regions per socket (each
+        socket's pool advances by its own makespan), then the outer
+        socket-level report with ``units=`` feedback — mirroring
+        ``TopologyDispatcher._split`` for a plan fixed by the snapshot."""
+        topo = self.dispatcher
+        kspec = self._kernel_spec(spec, m)
+        bpu = self._bytes_per_unit(spec)
+        parts = np.split(counts, np.cumsum(self._socket_cores)[:-1])
+        socket_counts = np.array([int(p.sum()) for p in parts],
+                                 dtype=np.int64)
+        placement = topo.placement_for(self._weights.get(spec.spec_id),
+                                       spec.n)
+        times = np.zeros(topo.n_sockets)
+        lo = 0
+        for s, c in enumerate(socket_counts):
+            hi = lo + int(c)
+            if c > 0:
+                scale = topo._work_scale(spec.isa, s, (lo, hi), placement)
+                st = topo.socket_dispatchers[s].dispatch(
+                    kspec, int(c), None, bytes_per_unit=bpu,
+                    work_scale=scale, update=update,
+                    plan=Plan(counts=parts[s], key=kspec.table_key,
+                              granularity=spec.granularity))
+                times[s] = st.makespan
+            lo = hi
+        bal = topo._balancer(kspec)
+        plan = Plan(counts=socket_counts, key=kspec.table_key,
+                    granularity=spec.granularity)
+        moved = float(spec.n) * bpu
+        st = bal.report(plan, times, update=update and topo.dynamic,
+                        label=f"{kspec.name}@{kspec.table_key}",
+                        bytes_moved=moved)
+        if moved > 0 and st.makespan > 0:
+            topo._bytes[spec.isa] = topo._bytes.get(spec.isa, 0.0) + moved
+            topo._busy[spec.isa] = topo._busy.get(spec.isa, 0.0) + st.makespan
+        if topo.keep_stats:
+            topo.stats.append(st)

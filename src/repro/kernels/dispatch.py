@@ -73,6 +73,7 @@ from repro.runtime import (
     Balancer,
     EvenPolicy,
     KernelSpec,
+    Plan,
     ProportionalPolicy,
     RatioTable,
     RegionStats,
@@ -284,16 +285,23 @@ class HybridKernelDispatcher:
     def dispatch(self, spec: KernelSpec, total: int,
                  fn: Optional[Callable[[int, int], None]] = None, *,
                  bytes_per_unit: float = 0.0, work_scale: float = 1.0,
-                 update: bool = True) -> RegionStats:
+                 update: bool = True,
+                 plan: Optional[Plan] = None) -> RegionStats:
         """One balanced parallel region of ``total`` units along the
         kernel's split dimension: plan per-core contiguous shards, run them
         on the ISA's pool, feed shard times back.  ``fn(start, size)``
         executes one shard (``None``: purely modelled).  ``work_scale``
         inflates the modelled work per unit without changing the bytes
         accounting — the NUMA hook: a byte streamed from a remote socket
-        costs ``cross_socket_penalty`` wall time but is still one byte."""
+        costs ``cross_socket_penalty`` wall time but is still one byte.
+        ``plan`` replays an externally realized split instead of planning
+        afresh — the compiled-decode feedback path, where the per-core
+        counts were fixed by the offset snapshot the device executed."""
         bal = self._balancer(spec)
-        plan = bal.plan(total)
+        if plan is None:
+            plan = bal.plan(total)
+        elif int(np.asarray(plan.counts).sum()) != total:
+            raise ValueError("replayed plan does not cover the region")
         work_per_unit = spec.work_per_unit * work_scale
         subtasks = [
             SubTask(worker=w, start=lo, size=hi - lo,

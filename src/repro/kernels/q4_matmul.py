@@ -30,7 +30,8 @@ _CompilerParams = getattr(pltpu, "CompilerParams",
 
 from repro.quant.q4 import GROUP, QuantizedLinear
 
-__all__ = ["q4_matmul_pallas", "DEFAULT_BLOCKS", "CANDIDATE_BLOCKS"]
+__all__ = ["q4_matmul_pallas", "q4_matmul_pallas_db", "DEFAULT_BLOCKS",
+           "CANDIDATE_BLOCKS"]
 
 # (bm, bn, bk): bk must be a multiple of GROUP (=32).
 DEFAULT_BLOCKS = (8, 256, 512)
@@ -75,6 +76,123 @@ def _kernel(x_ref, p_ref, s_ref, o_ref, acc_ref):
     @pl.when(k == pl.num_programs(2) - 1)
     def _flush():
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _dequant_tile(packed, scales, bn, half_bk):
+    """Shared dequant of one (bn, bk/2) packed tile into the two nibble
+    planes (see :func:`_kernel`'s layout note)."""
+    groups = half_bk * 2 // GROUP
+    p = packed.reshape(bn, groups, GROUP // 2)
+    s = scales.astype(jnp.float32)[..., None]  # (bn, groups, 1)
+    lo = (p & 0x0F).astype(jnp.float32)
+    hi = (p >> 4).astype(jnp.float32)
+    w_lo = ((lo - 8.0) * s).reshape(bn, half_bk)
+    w_hi = ((hi - 8.0) * s).reshape(bn, half_bk)
+    return w_lo, w_hi
+
+
+def _db_kernel(x_ref, p_hbm, s_hbm, o_ref,
+               p_buf, s_buf, acc_ref, p_sem, s_sem, *, bk: int):
+    """Double-buffered variant of :func:`_kernel`: the packed weight tiles
+    stay in HBM/ANY and are streamed into a two-slot VMEM scratch with
+    async copies — the next K tile's DMA is issued *before* the current
+    tile's dot products run, so on hardware the stream overlaps compute
+    (shard-level double buffering; the decode GEMV is bandwidth-bound, so
+    hiding the fetch behind the dot is the whole win).  Identical
+    accumulation order to the plain kernel — per K tile, low-plane dot
+    then high-plane dot — so outputs are bit-identical."""
+    j = pl.program_id(1)
+    _, bn, half_bk = p_buf.shape
+    groups = bk // GROUP
+    bm = x_ref.shape[0]
+    nk = x_ref.shape[1] // bk
+
+    def p_dma(slot, kk):
+        return pltpu.make_async_copy(
+            p_hbm.at[pl.ds(j * bn, bn), pl.ds(kk * half_bk, half_bk)],
+            p_buf.at[slot], p_sem.at[slot])
+
+    def s_dma(slot, kk):
+        return pltpu.make_async_copy(
+            s_hbm.at[pl.ds(j * bn, bn), pl.ds(kk * groups, groups)],
+            s_buf.at[slot], s_sem.at[slot])
+
+    # Warm up: start streaming tile 0 into slot 0.
+    p_dma(0, 0).start()
+    s_dma(0, 0).start()
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def body(kk, carry):
+        slot = jax.lax.rem(kk, 2)
+        nxt = jax.lax.rem(kk + 1, 2)
+
+        # Prefetch the next tile into the other slot while this one computes.
+        @pl.when(kk + 1 < nk)
+        def _prefetch():
+            p_dma(nxt, kk + 1).start()
+            s_dma(nxt, kk + 1).start()
+
+        p_dma(slot, kk).wait()
+        s_dma(slot, kk).wait()
+
+        w_lo, w_hi = _dequant_tile(p_buf[slot], s_buf[slot], bn, half_bk)
+        x = x_ref[pl.ds(0, bm), pl.ds(kk * bk, bk)]
+        x = x.astype(jnp.float32).reshape(bm, groups, GROUP)
+        x_lo = x[:, :, : GROUP // 2].reshape(bm, half_bk)
+        x_hi = x[:, :, GROUP // 2:].reshape(bm, half_bk)
+        acc_ref[...] += jnp.dot(x_lo, w_lo.T,
+                                preferred_element_type=jnp.float32)
+        acc_ref[...] += jnp.dot(x_hi, w_hi.T,
+                                preferred_element_type=jnp.float32)
+        return carry
+
+    jax.lax.fori_loop(0, nk, body, 0)
+    o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("blocks", "interpret"))
+def q4_matmul_pallas_db(
+    x: jax.Array,
+    qw: QuantizedLinear,
+    *,
+    blocks: tuple[int, int, int] = DEFAULT_BLOCKS,
+    interpret: bool = False,
+) -> jax.Array:
+    """Double-buffered ``x (M, K) x Q4_0 (N, K) -> (M, N)``: one grid over
+    (M, N) tiles with the K stream hand-pipelined inside the kernel (two
+    VMEM slots, DMA-prefetch of tile ``k+1`` overlapping tile ``k``'s
+    compute).  Bit-identical to :func:`q4_matmul_pallas` at equal ``bk``."""
+    m, k = x.shape
+    n = qw.packed.shape[0]
+    if qw.packed.shape[1] * 2 != k:
+        raise ValueError("K mismatch between x and packed weights")
+    bm, bn, bk = blocks
+    if bk % GROUP:
+        raise ValueError(f"bk={bk} must be a multiple of {GROUP}")
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"shape ({m},{n},{k}) not divisible by blocks {blocks}")
+    return pl.pallas_call(
+        functools.partial(_db_kernel, bk=bk),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # packed stays in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),  # scales stay in HBM
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((2, bn, bk // 2), jnp.uint8),      # two packed slots
+            pltpu.VMEM((2, bn, bk // GROUP), jnp.float16),
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel")
+        ),
+        interpret=interpret,
+    )(x, qw.packed, qw.scales)
 
 
 @functools.partial(jax.jit, static_argnames=("blocks", "interpret"))

@@ -88,7 +88,14 @@ def run_fleet_mode(args, cfg, params, max_seq: int) -> int:
     if args.fleet_admission:
         admission = AdmissionController(queue_cap=6 * len(specs),
                                         degrade_depth=3 * len(specs))
-    router = FleetRouter(cluster, policy=args.fleet_policy,
+    # --ratios warm-starts/persists the *node-level* fleet table here
+    # (same store format the replica path uses): a restarted router skips
+    # the cold-start rounds where every node looks identical.
+    table = RatioTable(len(specs), alpha=0.3)
+    store = RatioStore(args.ratios) if args.ratios else None
+    if store is not None and store.load_into(table):
+        print(f"[serve] warm-started fleet node ratios from {args.ratios}")
+    router = FleetRouter(cluster, policy=args.fleet_policy, table=table,
                          slo_ttft=2.0, slo_tpot=0.25, admission=admission)
     requests = fleet_requests(
         args.requests, base_rate=args.rate, vocab_size=cfg.vocab_size,
@@ -114,6 +121,9 @@ def run_fleet_mode(args, cfg, params, max_seq: int) -> int:
     if st is not None:
         print(f"[serve] recursive decode stats: {len(st.children)} node "
               f"domains under the fleet table")
+    if store is not None:
+        store.save(router.table)
+        print(f"[serve] saved fleet node ratios to {args.ratios}")
     return 0
 
 

@@ -10,13 +10,18 @@ host-side balanced linears — :class:`~repro.models.layers.
 BalancedQuantLinear` (Q4_0 decode GEMV), :class:`~repro.models.layers.
 BalancedLinear` (dynamic-u8 x s8 INT8 GEMM) or :class:`~repro.models.
 layers.BalancedFp32Linear` (precision reference, shard-exact) — and hands
-the trunk forward a per-layer projection hook that routes each matmul
-through :func:`~repro.kernels.dispatch.bridged_linear`:
+the trunk forward a per-layer projection hook.  Three execution modes:
 
-* under jit (the engine's compiled decode step) every projection becomes
-  an ordered ``io_callback`` into the dispatcher's worker pools;
-* eagerly (``jit_bridge=False``, the tracing-disallowed fallback) the same
-  layers run direct shard-wise execution.
+* ``mode="bridge"`` (the ``jit_bridge=True`` legacy spelling): under jit
+  every projection becomes an ordered ``io_callback`` into the
+  dispatcher's worker pools — the host re-plans *inside* the step;
+* ``mode="eager"`` (``jit_bridge=False``): tracing disallowed, direct
+  shard-wise execution;
+* ``mode="compiled"``: zero host callbacks — projections lower through a
+  :class:`~repro.kernels.compiled.CompiledDispatcher` as single Pallas
+  grids whose per-core boundaries are device offset arrays planned
+  *between* engine steps, with a traced cost tape feeding the same Eq. 2
+  EMA updates after the step (see :mod:`repro.kernels.compiled`).
 
 Table keys are per (ISA x layer kind): ``"membw/attn_proj"``,
 ``"avx_vnni/mlp_up"``, ... (see :data:`~repro.kernels.dispatch.
@@ -72,39 +77,70 @@ class BalancedTrunk:
     optional balanced LM head (kind ``"head"``).
     """
 
+    MODES = ("eager", "bridge", "compiled")
+
     def __init__(self, cfg: ModelConfig, dispatcher, *,
                  bank: Dict[Tuple[int, str, str], List],
                  head=None, quant: str = "q4", jit_bridge: bool = True,
-                 fused: bool = True):
+                 fused: bool = True, mode: Optional[str] = None,
+                 double_buffer: bool = True):
         self.cfg = cfg
         self.dispatcher = dispatcher
         self.bank = bank
         self.head = head
         self.quant = quant
-        self.jit_bridge = jit_bridge
+        # ``jit_bridge=`` is the legacy two-mode spelling; ``mode=`` wins
+        # when given.
+        mode = mode or ("bridge" if jit_bridge else "eager")
+        if mode not in self.MODES:
+            raise ValueError(f"mode must be one of {self.MODES}")
+        self.mode = mode
+        self.double_buffer = double_buffer
         # Fused q/k/v: the three input projections of an attention layer
         # share one jit-bridge round trip (a single ordered io_callback)
         # instead of three.  Token-identical to the per-matmul path — the
         # host side still runs three separate balanced regions in the same
         # program order — so False exists only as the identity reference.
+        # (Compiled mode has no round trips to fuse; the flag is ignored.)
         self.fused = fused
+        self._ctx = None  # lazy CompiledDispatcher (mode="compiled" only)
+
+    @property
+    def jit_bridge(self) -> bool:
+        """Whether the trunk's projections may be traced (legacy name: in
+        ``"compiled"`` mode they trace without any bridge)."""
+        return self.mode != "eager"
 
     # -------------------------------------------------------- construction --
     @classmethod
     def from_params(cls, cfg: ModelConfig, params: dict, dispatcher, *,
                     quant: str = "q4", include_head: bool = True,
-                    jit_bridge: bool = True,
-                    fused: bool = True) -> "BalancedTrunk":
+                    jit_bridge: bool = True, fused: bool = True,
+                    mode: Optional[str] = None, double_buffer: bool = True,
+                    pin_q4_blocks: bool = False) -> "BalancedTrunk":
         """Quantize (or copy, for fp32) every supported trunk projection of
         ``params`` into dispatcher-bound balanced linears.
 
         Weights are stored transposed relative to the forward's ``x @ w``
         convention: a (d_in, d_out) parameter becomes an (N, K) = (d_out,
         d_in) balanced linear computing ``x @ W.T``.
+
+        ``pin_q4_blocks`` pins every Q4 layer to the deterministic block
+        config the compiled lowering uses for its K
+        (:func:`~repro.kernels.compiled.q4_blocks`), making a bridged
+        trunk's Q4 outputs bit-identical to the compiled one's.
         """
         if quant not in QUANT_MODES:
             raise ValueError(f"quant must be one of {QUANT_MODES}")
         layer_cls = _LAYER_CLS[quant]
+
+        def make_layer(w):  # w is dense (N, K)
+            if quant == "q4" and pin_q4_blocks:
+                from repro.kernels.compiled import q4_blocks
+
+                return layer_cls.from_dense(w, dispatcher,
+                                            blocks=q4_blocks(w.shape[1]))
+            return layer_cls.from_dense(w, dispatcher)
         period = cfg.period()
         bank: Dict[Tuple[int, str, str], List] = {}
         for j, (mixer, ffn) in enumerate(period):
@@ -119,29 +155,82 @@ class BalancedTrunk:
                 for name in names:
                     w_stack = stack[name]  # (n_rep, d_in, d_out)
                     bank[(j, group, name)] = [
-                        layer_cls.from_dense(w_stack[r].T, dispatcher)
+                        make_layer(w_stack[r].T)
                         for r in range(cfg.n_periods)
                     ]
         head = None
         if include_head:
             w = (params["embed"]["tok"] if cfg.tie_embeddings
                  else params["embed"]["out"].T)  # (vocab, d_model)
-            head = layer_cls.from_dense(w, dispatcher)
+            head = make_layer(w)
         return cls(cfg, dispatcher, bank=bank, head=head, quant=quant,
-                   jit_bridge=jit_bridge, fused=fused)
+                   jit_bridge=jit_bridge, fused=fused, mode=mode,
+                   double_buffer=double_buffer)
+
+    # ------------------------------------------------------------ compiled --
+    def _compiled(self):
+        """The lazily-built :class:`~repro.kernels.compiled.
+        CompiledDispatcher` for this trunk, with every banked call site
+        (both phase ISAs, plus the head) pre-registered so the offset
+        snapshot's pytree keyset is complete before the first trace."""
+        if self.mode != "compiled":
+            raise ValueError(f"trunk mode is {self.mode!r}, not 'compiled'")
+        if self._ctx is None:
+            from repro.kernels.compiled import CompiledDispatcher
+
+            ctx = CompiledDispatcher(self.dispatcher,
+                                     double_buffer=self.double_buffer)
+            for (j, group, name), layers in self.bank.items():
+                for isa in ("membw", "avx_vnni"):
+                    ctx.spec_for(layers[0], isa, _KIND[(group, name)])
+            if self.head is not None:
+                for isa in ("membw", "avx_vnni"):
+                    ctx.spec_for(self.head, isa, "head")
+            self._ctx = ctx
+        return self._ctx
+
+    def compiled_refresh(self):
+        """Re-plan all call sites from the current ratio tables; returns
+        the device offset snapshot to pass into the next jitted step."""
+        return self._compiled().refresh()
+
+    def compiled_tape_begin(self):
+        return self._compiled().tape_begin()
+
+    def compiled_tape_end(self, tape):
+        return self._compiled().tape_end(tape)
+
+    def compiled_feedback(self, records, update: bool = True):
+        """Replay one step's cost-tape records through the dispatcher
+        (Eq. 2 EMA updates + bandwidth accounting) and return the
+        refreshed offset snapshot."""
+        return self._compiled().feedback(records, update=update)
 
     # ----------------------------------------------------------- dispatch --
     def supports(self, j: int, group: str) -> bool:
         return any(k[0] == j and k[1] == group for k in self.bank)
 
-    def projector(self, j: int, rep: int, group: str,
-                  isa: str) -> Optional[Callable]:
+    def projector(self, j: int, rep: int, group: str, isa: str,
+                  offsets=None) -> Optional[Callable]:
         """The ``proj(name, x, w)`` hook for one (period position, repeat,
         group): balanced layers where banked, in-graph matmul otherwise.
         Returns ``None`` when nothing at this position is banked (the
-        forward then skips hook plumbing entirely)."""
+        forward then skips hook plumbing entirely).  ``offsets`` (compiled
+        mode only) is the device offset snapshot the step was called with."""
         if not self.supports(j, group):
             return None
+
+        if self.mode == "compiled":
+            ctx = self._compiled()
+
+            def proj(name: str, x: jax.Array, w: jax.Array) -> jax.Array:
+                layers = self.bank.get((j, group, name))
+                if layers is None:
+                    return x @ w
+                return ctx.apply(layers[rep], x, isa=isa,
+                                 kind=_KIND[(group, name)], offsets=offsets)
+
+            return proj
 
         def proj(name: str, x: jax.Array, w: jax.Array) -> jax.Array:
             layers = self.bank.get((j, group, name))
@@ -171,12 +260,17 @@ class BalancedTrunk:
 
         return proj
 
-    def apply_head(self, x: jax.Array, *, isa: str) -> jax.Array:
-        """Balanced LM head with the per-phase ``"<isa>/head"`` table key
-        (host-side call — the engine applies the head outside the jitted
-        trunk)."""
+    def apply_head(self, x: jax.Array, *, isa: str,
+                   offsets=None) -> jax.Array:
+        """Balanced LM head with the per-phase ``"<isa>/head"`` table key.
+        Bridge/eager modes run it host-side (the engine applies the head
+        outside the jitted trunk); compiled mode lowers it in-graph like
+        every other projection."""
         if self.head is None:
             raise ValueError("trunk was built with include_head=False")
+        if self.mode == "compiled":
+            return self._compiled().apply(self.head, x, isa=isa,
+                                          kind="head", offsets=offsets)
         return bridged_linear(self.head, x, isa=isa,
                               key=kernel_key(isa, "head"),
                               allow_callback=self.jit_bridge)

@@ -101,16 +101,23 @@ class BalancedQuantLinear:
     weight runs a compute-bound prefill GEMM.
     """
 
-    def __init__(self, qw, dispatcher):
+    def __init__(self, qw, dispatcher, *, blocks=None):
         self.qw = qw
         self.dispatcher = dispatcher
+        # Optional pinned (bm, bn, bk): the compiled lowering pins a
+        # deterministic block config, so comparison trunks pin the same one
+        # here to make bridged-vs-compiled Q4 outputs bit-identical
+        # (Q4 float accumulation order depends on bk).
+        self.blocks = blocks
 
     @classmethod
-    def from_dense(cls, w: jax.Array, dispatcher) -> "BalancedQuantLinear":
+    def from_dense(cls, w: jax.Array, dispatcher, *,
+                   blocks=None) -> "BalancedQuantLinear":
         """Quantize a dense (N, K) weight to Q4_0 and bind the dispatcher."""
         from repro.quant.q4 import quantize_q4_0
 
-        return cls(quantize_q4_0(jnp.asarray(w, jnp.float32)), dispatcher)
+        return cls(quantize_q4_0(jnp.asarray(w, jnp.float32)), dispatcher,
+                   blocks=blocks)
 
     @property
     def out_features(self) -> int:
@@ -123,7 +130,7 @@ class BalancedQuantLinear:
             b, s, d = x.shape
             x = x.reshape(b * s, d)
         y = self.dispatcher.q4_matmul(x.astype(jnp.float32), self.qw,
-                                      isa=isa, key=key)
+                                      isa=isa, key=key, blocks=self.blocks)
         return y.reshape(b, s, -1) if unflatten else y
 
 

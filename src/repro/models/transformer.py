@@ -180,6 +180,7 @@ def forward(
     remat: bool = False,
     trunk=None,
     trunk_isa: str = "membw",
+    trunk_offsets=None,
 ) -> ForwardOut:
     """Trunk forward.
 
@@ -196,7 +197,8 @@ def forward(
     decode / "avx_vnni" prefill).  The period loop is then unrolled in
     Python instead of ``lax.scan`` — each (position, repeat) needs its own
     host-side weight bank, whether the callbacks are traced into a jitted
-    step or executed eagerly.
+    step or executed eagerly.  ``trunk_offsets`` (compiled trunks only) is
+    the device offset snapshot forwarded to every projection.
     """
     if embeds is not None:
         x = embeds.astype(cfg.cdtype)
@@ -233,8 +235,10 @@ def forward(
                         if have_state else None)
                 x, new_st, aux = _apply_layer(
                     cfg, mixer, ffn, p_j, x, positions, st_j, capacity,
-                    proj_attn=trunk.projector(j, r, "attn", trunk_isa),
-                    proj_ffn=trunk.projector(j, r, "ffn", trunk_isa),
+                    proj_attn=trunk.projector(j, r, "attn", trunk_isa,
+                                              offsets=trunk_offsets),
+                    proj_ffn=trunk.projector(j, r, "ffn", trunk_isa,
+                                             offsets=trunk_offsets),
                 )
                 x = constrain(x, ("dp", None, None))
                 if have_state:

@@ -18,6 +18,7 @@ deprecation shims re-exporting from here.
 """
 
 from .table import RatioTable, RatioStore
+from .offsets import OffsetSpec, OffsetSnapshot
 from .policy import (
     Plan,
     BalancePolicy,
@@ -45,6 +46,8 @@ from .planners import (
 __all__ = [
     "RatioTable",
     "RatioStore",
+    "OffsetSpec",
+    "OffsetSnapshot",
     "Plan",
     "BalancePolicy",
     "ProportionalPolicy",

@@ -1,0 +1,130 @@
+"""Ratio table -> device-array shard offsets (the compiled-decode snapshot).
+
+The io_callback bridge re-plans every balanced region on the host, inside
+the step.  The compiled lowering (:mod:`repro.kernels.compiled`) inverts
+that contract — exactly the paper's "balance *before* the parallel work
+starts": per-core shard boundaries are planned on the host *between* engine
+steps and materialized as small int32 device arrays that the jitted decode
+step consumes as ordinary inputs.  Nothing inside the compiled program ever
+calls back into Python; the table only influences the next step's offsets.
+
+:class:`OffsetSnapshot` owns that materialization for any planner:
+
+* ``register(OffsetSpec(name, total, granularity))`` declares one call
+  site's split dimension;
+* ``refresh()`` re-plans every registered spec from the current ratio
+  state (via the ``plan_counts`` callable the owner supplied — typically
+  a dispatcher's Balancer) and returns ``{name: (n_workers + 1,) int32
+  device array}`` of cumulative boundaries — worker ``w`` owns rows
+  ``[b[w], b[w+1])``;
+* ``boundaries(name)`` / ``counts(name)`` expose the host-side mirror of
+  the latest snapshot (what feedback replay compares device-recovered
+  shard sizes against).
+
+The snapshot is deliberately dumb about *how* counts are planned — flat
+per-core, two-level socket-then-core, even/static — the planner callable
+decides; the snapshot only guarantees that what the device reads is the
+plan the host will account for.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict
+
+import numpy as np
+
+__all__ = ["OffsetSpec", "OffsetSnapshot"]
+
+
+@dataclass(frozen=True)
+class OffsetSpec:
+    """One compiled call site's split dimension: ``total`` units planned
+    under ``name`` (the snapshot dict key, unique per call-site shape)."""
+
+    name: str
+    total: int
+    granularity: int = 1
+
+    def __post_init__(self) -> None:
+        if self.total < 0:
+            raise ValueError("total must be >= 0")
+        if self.granularity < 1:
+            raise ValueError("granularity must be >= 1")
+
+
+class OffsetSnapshot:
+    """Named host plans mirrored as device boundary arrays.
+
+    ``plan_counts(spec) -> (n_workers,) int64`` produces one plan from the
+    owner's current ratio state; ``refresh()`` runs it for every registered
+    spec and uploads the cumulative boundaries.  The returned dict is a
+    fresh pytree each refresh — callers pass it *as an argument* into their
+    jitted step (closing over it would bake the offsets in as constants and
+    defeat the between-step update).
+    """
+
+    def __init__(self, plan_counts: Callable[[OffsetSpec], np.ndarray]):
+        self._plan_counts = plan_counts
+        self._specs: Dict[str, OffsetSpec] = {}
+        self._host: Dict[str, np.ndarray] = {}
+        self._device: Dict[str, object] = {}
+
+    # -------------------------------------------------------- registration --
+    def register(self, spec: OffsetSpec) -> OffsetSpec:
+        """Declare (or re-declare, idempotently) one call site.  Re-using a
+        name with a different shape is a programming error and is refused."""
+        prev = self._specs.get(spec.name)
+        if prev is not None:
+            if prev != spec:
+                raise ValueError(
+                    f"offset spec {spec.name!r} already registered with "
+                    f"total={prev.total}, granularity={prev.granularity}")
+            return prev
+        self._specs[spec.name] = spec
+        return spec
+
+    @property
+    def names(self) -> list:
+        return list(self._specs)
+
+    def spec(self, name: str) -> OffsetSpec:
+        return self._specs[name]
+
+    # ------------------------------------------------------------- refresh --
+    def refresh(self) -> Dict[str, object]:
+        """Re-plan every registered spec from current ratio state; returns
+        the new device snapshot ``{name: (n_workers + 1,) int32}``."""
+        import jax.numpy as jnp
+
+        device: Dict[str, object] = {}
+        for name, spec in self._specs.items():
+            counts = np.asarray(self._plan_counts(spec), dtype=np.int64)
+            if int(counts.sum()) != spec.total:
+                raise ValueError(
+                    f"planner returned {int(counts.sum())} units for "
+                    f"{name!r} (expected {spec.total})")
+            bounds = np.zeros(len(counts) + 1, dtype=np.int32)
+            np.cumsum(counts, out=bounds[1:])
+            self._host[name] = bounds
+            device[name] = jnp.asarray(bounds)
+        self._device = device
+        return device
+
+    def device(self) -> Dict[str, object]:
+        """The latest device snapshot (refreshing first if none exists)."""
+        if not self._device and self._specs:
+            return self.refresh()
+        return self._device
+
+    # ---------------------------------------------------------- host mirror --
+    def boundaries(self, name: str) -> np.ndarray:
+        """Host-side cumulative boundaries of the latest snapshot."""
+        if name not in self._host:
+            self.refresh()
+        return self._host[name]
+
+    def counts(self, name: str) -> np.ndarray:
+        """Host-side per-worker counts of the latest snapshot."""
+        b = self.boundaries(name)
+        return (b[1:] - b[:-1]).astype(np.int64)

@@ -203,9 +203,11 @@ class ContinuousBatchingEngine:
         # Pallas shards with per-phase ISA table keys.  ``balanced_trunk``
         # (a models.BalancedTrunk) extends the same loop to *every*
         # projection of the step — q/k/v/o and MLP up/gate/down run as
-        # per-core shards through the io_callback bridge (or eagerly when
-        # the trunk disallows tracing), under (phase ISA x layer kind)
-        # table keys; its optional head replaces ``balanced_head``.
+        # per-core shards through the io_callback bridge, eagerly when
+        # the trunk disallows tracing, or (mode="compiled") as offset-
+        # driven single-grid lowerings with zero host callbacks — under
+        # (phase ISA x layer kind) table keys; its optional head replaces
+        # ``balanced_head``.
         if balanced_head is not None and balanced_trunk is not None \
                 and balanced_trunk.head is not None:
             raise ValueError(
@@ -244,33 +246,83 @@ class ContinuousBatchingEngine:
         # runs its shard dispatches eagerly, so the step functions must
         # not be jitted (the io_callback bridge would otherwise trace).
         use_jit = trunk is None or trunk.jit_bridge
-
-        def _prefill(params, tokens, state, offset):
-            out = forward(cfg, params, tokens, state=state, pos_offset=offset,
-                          logits_mode="last", apply_head=apply_head,
-                          trunk=trunk, trunk_isa=PHASE_ISA[PREFILL])
-            return out.logits[:, -1, :], out.state
+        # Compiled trunk: the step functions take the device offset
+        # snapshot as an extra argument, apply the balanced head in-graph,
+        # and return the traced cost tape as an extra output — zero host
+        # callbacks inside the step; ratio feedback + offset refresh run
+        # between steps (see repro.kernels.compiled).
+        compiled = trunk is not None and getattr(trunk, "mode",
+                                                 None) == "compiled"
+        self._compiled_trunk = compiled
 
         donate = (2,) if donate_state and use_jit else ()
 
-        def _decode(params, tok, state, pos):
-            out = forward(cfg, params, tok, state=state, pos_offset=pos,
-                          apply_head=apply_head,
-                          trunk=trunk, trunk_isa=PHASE_ISA[DECODE])
-            return out.logits[:, -1, :], out.state
+        if compiled:
+            def _head_in_graph(logits, phase, offsets):
+                if trunk.head is None:
+                    return logits
+                return trunk.apply_head(logits, isa=PHASE_ISA[phase],
+                                        offsets=offsets)
 
-        def _prefill_lanes_fn(params, tokens, states, offsets):
-            # One batched trunk call over all active lanes: per-row cache
-            # offsets (each lane appends at its own position), then the
-            # rows split back into batch-1 partial states.
-            stacked = _stack_lane_states(states)
-            out = forward(cfg, params, tokens, state=stacked,
-                          pos_offset=offsets, logits_mode="last",
-                          apply_head=apply_head, trunk=trunk,
-                          trunk_isa=PHASE_ISA[PREFILL])
-            rows = [_slice_lane_state(out.state, i)
-                    for i in range(len(states))]
-            return out.logits[:, -1, :], rows
+            def _prefill(params, tokens, state, offset, offsets):
+                tape = trunk.compiled_tape_begin()
+                out = forward(cfg, params, tokens, state=state,
+                              pos_offset=offset, logits_mode="last",
+                              apply_head=apply_head, trunk=trunk,
+                              trunk_isa=PHASE_ISA[PREFILL],
+                              trunk_offsets=offsets)
+                logits = _head_in_graph(out.logits[:, -1, :], PREFILL,
+                                        offsets)
+                return logits, out.state, trunk.compiled_tape_end(tape)
+
+            def _decode(params, tok, state, pos, offsets):
+                tape = trunk.compiled_tape_begin()
+                out = forward(cfg, params, tok, state=state, pos_offset=pos,
+                              apply_head=apply_head, trunk=trunk,
+                              trunk_isa=PHASE_ISA[DECODE],
+                              trunk_offsets=offsets)
+                logits = _head_in_graph(out.logits[:, -1, :], DECODE,
+                                        offsets)
+                return logits, out.state, trunk.compiled_tape_end(tape)
+
+            def _prefill_lanes_fn(params, tokens, states, offsets, snap):
+                tape = trunk.compiled_tape_begin()
+                stacked = _stack_lane_states(states)
+                out = forward(cfg, params, tokens, state=stacked,
+                              pos_offset=offsets, logits_mode="last",
+                              apply_head=apply_head, trunk=trunk,
+                              trunk_isa=PHASE_ISA[PREFILL],
+                              trunk_offsets=snap)
+                rows = [_slice_lane_state(out.state, i)
+                        for i in range(len(states))]
+                logits = _head_in_graph(out.logits[:, -1, :], PREFILL, snap)
+                return logits, rows, trunk.compiled_tape_end(tape)
+        else:
+            def _prefill(params, tokens, state, offset):
+                out = forward(cfg, params, tokens, state=state,
+                              pos_offset=offset, logits_mode="last",
+                              apply_head=apply_head,
+                              trunk=trunk, trunk_isa=PHASE_ISA[PREFILL])
+                return out.logits[:, -1, :], out.state
+
+            def _decode(params, tok, state, pos):
+                out = forward(cfg, params, tok, state=state, pos_offset=pos,
+                              apply_head=apply_head,
+                              trunk=trunk, trunk_isa=PHASE_ISA[DECODE])
+                return out.logits[:, -1, :], out.state
+
+            def _prefill_lanes_fn(params, tokens, states, offsets):
+                # One batched trunk call over all active lanes: per-row
+                # cache offsets (each lane appends at its own position),
+                # then the rows split back into batch-1 partial states.
+                stacked = _stack_lane_states(states)
+                out = forward(cfg, params, tokens, state=stacked,
+                              pos_offset=offsets, logits_mode="last",
+                              apply_head=apply_head, trunk=trunk,
+                              trunk_isa=PHASE_ISA[PREFILL])
+                rows = [_slice_lane_state(out.state, i)
+                        for i in range(len(states))]
+                return out.logits[:, -1, :], rows
 
         if use_jit:
             _prefill = jax.jit(_prefill)
@@ -280,6 +332,9 @@ class ContinuousBatchingEngine:
         self._prefill = _prefill
         self._prefill_lanes = _prefill_lanes_fn
         self._decode = _decode
+        # Initial offset snapshot (compiled mode): planned from whatever
+        # the ratio tables currently hold, refreshed after every step.
+        self._offsets = trunk.compiled_refresh() if compiled else None
 
     @staticmethod
     def _adopt_topology(trunk, topology):
@@ -310,6 +365,9 @@ class ContinuousBatchingEngine:
 
     def _head(self, hidden: jax.Array, phase: str) -> jax.Array:
         """Apply the (possibly balanced) LM head to (B, d) hidden states."""
+        if self._compiled_trunk and self.balanced_head is None:
+            # Compiled trunk: its head (if any) already ran in-graph.
+            return hidden
         if self.balanced_head is not None or (
                 self.balanced_trunk is not None
                 and self.balanced_trunk.head is not None):
@@ -448,9 +506,14 @@ class ContinuousBatchingEngine:
             tokens = jnp.asarray(
                 req.prompt[chunk.start:chunk.start + chunk.length][None, :])
             t0 = time.perf_counter()
-            logits, small = self._prefill(
-                self.params, tokens, self._partial,
-                jnp.asarray(chunk.start, jnp.int32))
+            if self._compiled_trunk:
+                logits, small, recs = self._prefill(
+                    self.params, tokens, self._partial,
+                    jnp.asarray(chunk.start, jnp.int32), self._offsets)
+            else:
+                logits, small = self._prefill(
+                    self.params, tokens, self._partial,
+                    jnp.asarray(chunk.start, jnp.int32))
             tok = None
             if chunk.is_last:
                 # head + sampling inside the timed window, matching the
@@ -464,6 +527,11 @@ class ContinuousBatchingEngine:
             else:
                 dt = self.cost_model.prefill_seconds(
                     chunk.length, ctx=chunk.start + chunk.length)
+            if self._compiled_trunk:
+                # Between-step feedback: replay the step's cost tape into
+                # the ratio tables and refresh the offset snapshot.
+                self._offsets = self.balanced_trunk.compiled_feedback(
+                    jax.device_get(recs))
             req.prefill_done += chunk.length
             sched.prefill_advanced(chunk)
             self.now += dt
@@ -487,7 +555,12 @@ class ContinuousBatchingEngine:
             tok = jnp.asarray(man.last_token[:, None])
             pos = jnp.asarray(man.pos)
             t0 = time.perf_counter()
-            logits, man.state = self._decode(self.params, tok, man.state, pos)
+            if self._compiled_trunk:
+                logits, man.state, recs = self._decode(
+                    self.params, tok, man.state, pos, self._offsets)
+            else:
+                logits, man.state = self._decode(self.params, tok,
+                                                 man.state, pos)
             next_tok = np.asarray(
                 self._pick(self._head(logits, DECODE))).reshape(-1)
             if self.cost_model is None:
@@ -495,6 +568,9 @@ class ContinuousBatchingEngine:
             else:
                 dt = self.cost_model.decode_seconds(
                     len(self._running), ctx=int(man.pos.max()))
+            if self._compiled_trunk:
+                self._offsets = self.balanced_trunk.compiled_feedback(
+                    jax.device_get(recs))
             self.now += dt
             st.decode_tokens = len(self._running)
             st.decode_seconds = dt
@@ -533,8 +609,12 @@ class ContinuousBatchingEngine:
             np.array([c.start for c in chunks], dtype=np.int32))
         states = [self._partials[c.request.request_id] for c in chunks]
         t0 = time.perf_counter()
-        logits, rows = self._prefill_lanes(self.params, tokens, states,
-                                           offsets)
+        if self._compiled_trunk:
+            logits, rows, recs = self._prefill_lanes(
+                self.params, tokens, states, offsets, self._offsets)
+        else:
+            logits, rows = self._prefill_lanes(self.params, tokens, states,
+                                               offsets)
         finishing = [i for i, c in enumerate(chunks) if c.is_last]
         picked = None
         if finishing:  # head + sampling inside the timed window (TTFT)
@@ -549,6 +629,9 @@ class ContinuousBatchingEngine:
             dt = self.cost_model.prefill_seconds(
                 length * len(chunks),
                 ctx=max(c.start + length for c in chunks))
+        if self._compiled_trunk:
+            self._offsets = self.balanced_trunk.compiled_feedback(
+                jax.device_get(recs))
         self.now += dt
         st.prefill_tokens = length * len(chunks)
         st.prefill_seconds = dt

@@ -1,0 +1,265 @@
+"""Compiled balanced decode: zero-callback shard lowering vs the bridge.
+
+Covers the PR-7 acceptance gates:
+* the double-buffered Q4 kernel is bit-identical to the plain kernel;
+* every projection kind x quant mode matches the bridged path (Q4
+  bit-exact under pinned blocks, int8/fp32 within float tolerance);
+* the compiled decode step's jaxpr contains ZERO io_callback ops (the
+  bridged step's contains many);
+* engine-level token identity: a compiled trunk generates exactly the
+  tokens the bridged trunk does, for all three quant modes and for the
+  socket-local NUMA topology;
+* the cost-tape feedback keeps the ratio loop learning (hybrid cores
+  differentiate, bandwidth accounting accrues).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.compiled import CompiledDispatcher, q4_blocks
+from repro.kernels.dispatch import GEMV_ISA, HybridKernelDispatcher, kernel_key
+from repro.runtime import OffsetSnapshot, OffsetSpec
+
+
+# ------------------------------------------------------ offset snapshot --
+def test_offset_spec_validation():
+    with pytest.raises(ValueError):
+        OffsetSpec("x", total=-1)
+    with pytest.raises(ValueError):
+        OffsetSpec("x", total=8, granularity=0)
+
+
+def test_offset_snapshot_refresh_and_mirror():
+    plans = {"a": np.array([3, 5, 0]), "b": np.array([4, 4, 4])}
+    snap = OffsetSnapshot(lambda spec: plans[spec.name])
+    snap.register(OffsetSpec("a", total=8))
+    snap.register(OffsetSpec("a", total=8))  # idempotent
+    snap.register(OffsetSpec("b", total=12))
+    with pytest.raises(ValueError):  # shape change refused
+        snap.register(OffsetSpec("a", total=9))
+    dev = snap.refresh()
+    assert sorted(dev) == ["a", "b"]
+    np.testing.assert_array_equal(np.asarray(dev["a"]), [0, 3, 8, 8])
+    np.testing.assert_array_equal(snap.boundaries("b"), [0, 4, 8, 12])
+    np.testing.assert_array_equal(snap.counts("a"), [3, 5, 0])
+    plans["a"] = np.array([1, 1, 1])  # planner no longer covers total
+    with pytest.raises(ValueError):
+        snap.refresh()
+
+
+# ------------------------------------------------- double-buffered kernel --
+@pytest.mark.parametrize("shape,blocks", [
+    ((8, 256, 512), (8, 256, 512)),
+    ((8, 512, 1024), (8, 256, 256)),
+    ((16, 256, 256), (8, 128, 128)),
+])
+def test_q4_db_kernel_bit_identical(shape, blocks):
+    """The hand-pipelined (async-copy double-buffered) Q4 kernel keeps the
+    plain kernel's accumulation order exactly -> bitwise-equal outputs."""
+    from repro.kernels.q4_matmul import q4_matmul_pallas, q4_matmul_pallas_db
+    from repro.quant.q4 import quantize_q4_0
+
+    m, n, k = shape
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    qw = quantize_q4_0(jnp.asarray(
+        rng.standard_normal((n, k)).astype(np.float32)))
+    a = q4_matmul_pallas(x, qw, blocks=blocks, interpret=True)
+    b = q4_matmul_pallas_db(x, qw, blocks=blocks, interpret=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_q4_blocks_fixup_matches_ops_layer():
+    assert q4_blocks(512) == (8, 256, 512)
+    assert q4_blocks(192) == (8, 256, 64)
+    assert q4_blocks(32) == (8, 256, 32)
+
+
+# ------------------------------------------------- per-projection identity --
+def _trunks(quant, machine="ultra-125h"):
+    from repro.configs import reduced_config
+    from repro.models import BalancedTrunk, init_params
+
+    cfg = reduced_config("granite-8b")
+    params = init_params(cfg, jax.random.key(0))
+    disp = HybridKernelDispatcher.virtual(machine, execute=True)
+    bridged = BalancedTrunk.from_params(cfg, params, disp, quant=quant,
+                                        pin_q4_blocks=True)
+    compiled = BalancedTrunk.from_params(cfg, params, disp, quant=quant,
+                                         mode="compiled")
+    return cfg, params, disp, bridged, compiled
+
+
+# the paper trunk's 7 projection kinds (4 attn + 3 swiglu MLP), plus head
+PROJECTIONS = [("attn", "wq"), ("attn", "wk"), ("attn", "wv"),
+               ("attn", "wo"), ("ffn", "wi"), ("ffn", "wg"), ("ffn", "wo")]
+
+
+@pytest.mark.parametrize("quant", ["q4", "int8", "fp32"])
+def test_compiled_projections_match_bridged(quant):
+    """Every projection kind of the trunk (and the head) produces the
+    bridged path's output through the compiled lowering — bit-exact for
+    Q4 (same pinned blocks => same accumulation order), float-tight for
+    int8/fp32 (shard split changes the f32 reduction order only)."""
+    cfg, params, disp, bridged, compiled = _trunks(quant)
+    offsets = compiled.compiled_refresh()
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal(
+        (2, cfg.d_model)).astype(np.float32))
+    checked = 0
+    for group, name in PROJECTIONS:
+        if (0, group, name) not in bridged.bank:
+            continue
+        proj_b = bridged.projector(0, 0, group, GEMV_ISA)
+        proj_c = compiled.projector(0, 0, group, GEMV_ISA, offsets=offsets)
+        xin = x
+        if (group, name) == ("ffn", "wo"):  # mlp_down eats (., d_ff)
+            xin = jnp.asarray(rng.standard_normal(
+                (2, cfg.d_ff)).astype(np.float32))
+        a = np.asarray(proj_b(name, xin, None))
+        b = np.asarray(proj_c(name, xin, None))
+        if quant == "q4":
+            np.testing.assert_array_equal(a, b)
+        else:
+            np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-5)
+        checked += 1
+    assert checked == len(PROJECTIONS)
+    a = np.asarray(bridged.apply_head(x, isa=GEMV_ISA))
+    b = np.asarray(compiled.apply_head(x, isa=GEMV_ISA, offsets=offsets))
+    if quant == "q4":
+        np.testing.assert_array_equal(a, b)
+    else:
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-5)
+
+
+# ------------------------------------------------------- zero callbacks --
+def test_compiled_decode_step_has_zero_io_callbacks():
+    """The whole compiled decode step — trunk projections AND head — traces
+    without a single host callback; the bridged step carries one per
+    region (that's the raw-speed ceiling this PR removes)."""
+    from repro.models.transformer import forward, init_state
+
+    cfg, params, disp, bridged, compiled = _trunks("q4")
+    state = init_state(cfg, 1, 8)
+    tok = jnp.zeros((1, 1), jnp.int32)
+    offsets = compiled.compiled_refresh()
+
+    def compiled_step(p, t, s, offs):
+        tape = compiled.compiled_tape_begin()
+        out = forward(cfg, p, t, state=s, apply_head=False, trunk=compiled,
+                      trunk_isa=GEMV_ISA, trunk_offsets=offs)
+        logits = compiled.apply_head(out.logits[:, -1, :], isa=GEMV_ISA,
+                                     offsets=offs)
+        return logits, out.state, compiled.compiled_tape_end(tape)
+
+    def bridged_step(p, t, s):
+        out = forward(cfg, p, t, state=s, apply_head=False, trunk=bridged,
+                      trunk_isa=GEMV_ISA)
+        return out.logits[:, -1, :], out.state
+
+    n_compiled = str(jax.make_jaxpr(compiled_step)(
+        params, tok, state, offsets)).count("io_callback")
+    n_bridged = str(jax.make_jaxpr(bridged_step)(
+        params, tok, state)).count("io_callback")
+    assert n_compiled == 0
+    assert n_bridged > 0
+
+
+# -------------------------------------------------- engine token identity --
+def _run_engine(trunk_kw, quant, machine="ultra-125h", topology=None,
+                n_requests=3, steps=4):
+    from repro.configs import reduced_config
+    from repro.models import BalancedTrunk, init_params
+    from repro.serving import (
+        ContinuousBatchingEngine,
+        HybridPhaseCost,
+        poisson_requests,
+    )
+
+    cfg = reduced_config("granite-8b")
+    params = init_params(cfg, jax.random.key(0))
+    if topology is not None:
+        from repro.topology import TopologyDispatcher
+
+        disp = TopologyDispatcher(topology, execute=True)
+        clock = topology
+    else:
+        disp = HybridKernelDispatcher.virtual(machine, execute=True)
+        clock = machine
+    trunk = BalancedTrunk.from_params(cfg, params, disp, quant=quant,
+                                      **trunk_kw)
+    engine = ContinuousBatchingEngine(
+        cfg, params, max_slots=2, max_seq=16, prefill_chunk=4,
+        cost_model=HybridPhaseCost(clock), balanced_trunk=trunk)
+    requests = poisson_requests(n_requests, rate=100.0,
+                                vocab_size=cfg.vocab_size,
+                                prompt_len=6, max_new_tokens=steps, seed=0)
+    for r in requests:
+        engine.submit(r)
+    engine.run_until_idle()
+    return requests, disp
+
+
+@pytest.mark.parametrize("quant", ["q4", "int8", "fp32"])
+def test_compiled_engine_tokens_identical_to_bridged(quant):
+    bridged, _ = _run_engine(dict(jit_bridge=True, pin_q4_blocks=True), quant)
+    compiled, disp = _run_engine(dict(mode="compiled"), quant)
+    for a, b in zip(bridged, compiled):
+        assert a.generated == b.generated
+    # the between-step feedback kept the ratio loop learning: every
+    # (phase ISA x kind) key exists and the hybrid cores differentiated
+    kinds = ("attn_proj", "mlp_up", "mlp_down", "head")
+    expect = {kernel_key(isa, kind)
+              for isa in ("avx_vnni", "membw") for kind in kinds}
+    assert expect <= set(disp.table.keys())
+    spread = disp.table.ratios(kernel_key(GEMV_ISA, "mlp_up"))
+    assert spread.max() / spread.min() > 1.1
+    assert disp.achieved_bandwidth(GEMV_ISA) > 0
+
+
+def test_compiled_engine_tokens_identical_on_numa_topology():
+    """Socket-local two-level dispatch survives the compiled lowering:
+    same tokens, and the topology's outer (socket) accounting accrues."""
+    bridged, _ = _run_engine(dict(jit_bridge=True, pin_q4_blocks=True),
+                             "q4", topology="dual-125h")
+    compiled, topo = _run_engine(dict(mode="compiled"), "q4",
+                                 topology="dual-125h")
+    for a, b in zip(bridged, compiled):
+        assert a.generated == b.generated
+    assert len(topo.stats) > 0                      # outer-level reports
+    assert topo._bytes.get(GEMV_ISA, 0.0) > 0       # aggregate accounting
+    assert len(topo.socket_ratios(kernel_key(GEMV_ISA, "mlp_up"))) == 2
+
+
+def test_compiled_eager_apply_and_feedback_roundtrip():
+    """CompiledDispatcher standalone: apply eagerly, feed the recorded
+    sizes back, and the snapshot re-plans away from even splits."""
+    from repro.models.layers import BalancedQuantLinear
+
+    rng = np.random.default_rng(0)
+    disp = HybridKernelDispatcher.virtual("ultra-125h", execute=True)
+    cd = CompiledDispatcher(disp)
+    layer = BalancedQuantLinear.from_dense(
+        rng.standard_normal((64, 256)).astype(np.float32), disp)
+    spec = cd.spec_for(layer, GEMV_ISA, "attn_proj")
+    x = jnp.asarray(rng.standard_normal((2, 256)).astype(np.float32))
+
+    def step(x, offs):
+        tape = cd.tape_begin()
+        y = cd.apply(layer, x, isa=GEMV_ISA, kind="attn_proj", offsets=offs)
+        return y, cd.tape_end(tape)
+
+    offs = cd.refresh()
+    first = cd.snapshot.counts(spec.name).copy()
+    for _ in range(4):
+        _, recs = jax.jit(step)(x, offs)
+        offs = cd.feedback(jax.device_get(recs))
+    assert disp.table.ratios(spec.key).max() > 1.0
+    assert not np.array_equal(first, cd.snapshot.counts(spec.name))
+    # replayed sizes must cover the region exactly
+    bad = [{"spec": np.int32(spec.spec_id), "m": np.int32(2),
+            "sizes": np.zeros(disp.n_workers, np.int32)}]
+    with pytest.raises(ValueError):
+        cd.feedback(bad)

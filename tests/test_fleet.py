@@ -385,3 +385,69 @@ def test_dispatcher_reactivated_replica_relearns(model):
         disp.run_until_idle()
     dec = disp.table.ratios(DECODE)
     assert dec[0] > dec[1]  # replica 1 is 3x slower
+
+
+def test_admission_estimate_accounts_for_inflight_remaining_tokens(model):
+    """The deadline estimate reads actual in-flight decode backlog: parked
+    requests with few remaining tokens (e.g. degraded admissions) raise
+    the estimate less than long-lived ones, and a long request's
+    contention is capped at the new request's own lifetime."""
+    cluster = build_cluster(model)
+    router = FleetRouter(cluster, policy="learned",
+                         admission=AdmissionController())
+    router.run(traffic(n=8, rate=50.0, seed=4))   # warm the tps EWMAs
+    adm = AdmissionController()
+    probe = Request(prompt=np.arange(8), max_new_tokens=8,
+                    arrival_time=router.now)
+
+    def estimate_with_parked(max_new_tokens):
+        if max_new_tokens == 0:
+            return adm.estimate_finish(probe, router)
+        parked = []
+        for node in cluster.nodes:
+            r = Request(prompt=np.arange(4), max_new_tokens=max_new_tokens,
+                        arrival_time=router.now)
+            node.submit(r)
+            parked.append((node, r))
+        est = adm.estimate_finish(probe, router)
+        for node, r in parked:
+            for e in node.engines:
+                if r in e.outstanding():
+                    e.abort(r)
+        return est
+
+    idle = estimate_with_parked(0)
+    degraded = estimate_with_parked(2)    # short remainder (degraded-like)
+    long_lived = estimate_with_parked(40)
+    assert idle < degraded < long_lived
+    # contention caps at the probe's lifetime: 40 remaining counts as 8
+    node = cluster.nodes[0]
+    r = Request(prompt=np.arange(4), max_new_tokens=40,
+                arrival_time=router.now)
+    node.submit(r)
+    assert node.remaining_decode_tokens(cap=8) == 8
+    assert node.remaining_decode_tokens() == 40
+
+
+def test_fleet_serve_ratio_store_roundtrip(model, tmp_path, capsys):
+    """--fleet --ratios round trip: the first run saves the node-level
+    fleet table, the second warm-starts from it (ISSUE 7 satellite)."""
+    from types import SimpleNamespace
+
+    from repro.launch.serve import run_fleet_mode
+    from repro.runtime import RatioStore, RatioTable
+
+    cfg, params = model
+    path = tmp_path / "fleet_ratios.json"
+    args = SimpleNamespace(batch=2, seed=0, fleet_policy="learned",
+                           fleet_admission=False, requests=6, rate=50.0,
+                           prompt_len=8, steps=3, ratios=str(path))
+    assert run_fleet_mode(args, cfg, params, max_seq=24) == 0
+    first = capsys.readouterr().out
+    assert "saved fleet node ratios" in first
+    assert path.exists()
+    saved = RatioTable(4)
+    assert RatioStore(str(path)).load_into(saved)
+    assert run_fleet_mode(args, cfg, params, max_seq=24) == 0
+    second = capsys.readouterr().out
+    assert "warm-started fleet node ratios" in second
