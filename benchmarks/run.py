@@ -11,6 +11,13 @@ import sys
 
 
 def main() -> None:
+    if "--contracts" in sys.argv[1:]:
+        # run every figure reproduction under the IV runtime contracts
+        # (repro.analysis.invariants): a violated invariant fails the
+        # report instead of silently skewing a reproduced number
+        from repro.analysis import invariants
+        invariants.enable()
+
     from . import bench_gemm_parallel, bench_gemv_bandwidth, bench_e2e
     from . import bench_ratio_trace, bench_kernels, bench_serving
     from . import bench_fleet

@@ -1,0 +1,40 @@
+"""repro.analysis — static analysis & invariant verification for the
+balancing stack.
+
+Four passes behind one CLI (``python -m repro.analysis
+[lint|audit|races|invariants|all]``), all reporting structured
+:class:`~repro.analysis.findings.Finding`s:
+
+* :mod:`~repro.analysis.lint` — repo-specific AST rules (RL001–RL005);
+* :mod:`~repro.analysis.jaxpr_audit` — per-mode host-callback contracts
+  over traced decode steps (JA001–JA004);
+* :mod:`~repro.analysis.races` — vector-clock happens-before race
+  detection over replayed pool schedules (RC001);
+* :mod:`~repro.analysis.invariants` — toggleable runtime contracts
+  (IV001–IV005, enabled with ``REPRO_ANALYSIS_CONTRACTS=1``).
+
+Submodules are imported lazily: ``findings``/``lint``/``invariants`` are
+stdlib+numpy only, and instrumented hot paths import ``invariants`` without
+pulling jax-facing passes in.
+"""
+
+from .findings import Finding, format_findings
+
+__all__ = [
+    "Finding",
+    "format_findings",
+    "lint",
+    "jaxpr_audit",
+    "races",
+    "invariants",
+]
+
+_SUBMODULES = ("lint", "jaxpr_audit", "races", "invariants", "findings")
+
+
+def __getattr__(name):
+    if name in _SUBMODULES:
+        import importlib
+
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

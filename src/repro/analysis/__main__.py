@@ -1,0 +1,68 @@
+"""CLI: ``python -m repro.analysis [lint|audit|races|invariants|all]``.
+
+Runs the selected passes and prints structured findings one per line
+(``location: severity: [RULE] message``).  Exit status 1 when any
+error-severity finding survives — CI runs ``all`` over ``src/`` as the
+static-analysis gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .findings import format_findings
+
+PASSES = ("lint", "audit", "races", "invariants")
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static analysis & invariant verification passes.")
+    parser.add_argument("passes", nargs="*", default=["all"],
+                        choices=list(PASSES) + ["all"],
+                        help="passes to run (default: all)")
+    parser.add_argument("--root", default="src",
+                        help="directory (or file) the lint pass walks "
+                             "(default: src)")
+    parser.add_argument("--json", action="store_true",
+                        help="emit findings as JSON instead of text")
+    parser.add_argument("--quiet", action="store_true",
+                        help="suppress per-pass progress lines")
+    args = parser.parse_args(argv)
+
+    selected = list(PASSES) if "all" in args.passes else \
+        [p for p in PASSES if p in args.passes]
+    log = (lambda s: None) if args.quiet or args.json else \
+        (lambda s: print(s, file=sys.stderr))
+
+    findings = []
+    for name in selected:
+        if name == "lint":
+            from . import lint
+            findings.extend(lint.run_pass(args.root, log=log))
+        elif name == "audit":
+            from . import jaxpr_audit
+            findings.extend(jaxpr_audit.run_pass(log=log))
+        elif name == "races":
+            from . import races
+            findings.extend(races.run_pass(log=log))
+        elif name == "invariants":
+            from . import invariants
+            findings.extend(invariants.run_pass(log=log))
+
+    if args.json:
+        print(json.dumps([f.to_json() for f in findings], indent=2))
+    elif findings:
+        print(format_findings(findings))
+    errors = sum(1 for f in findings if f.severity == "error")
+    if not args.json:
+        print(f"repro.analysis: {len(selected)} pass(es), "
+              f"{len(findings)} finding(s), {errors} error(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,375 @@
+"""Jaxpr auditor: per-mode host-callback contracts for traced decode steps.
+
+PR 7's headline property — "the compiled decode step contains zero host
+callbacks" — was one ad-hoc string count in ``tests/test_compiled.py``.
+This pass turns it (and its bridged-mode dual) into a reusable audit over
+the actual jaxpr, closed-call-aware, so every future trace mode is held to
+an explicit contract:
+
+* **JA001** — a ``mode="compiled"`` step must contain **zero**
+  ``io_callback`` / ``pure_callback`` / ``debug_callback`` primitives
+  anywhere in the (recursively walked) jaxpr.
+* **JA002** — :class:`~repro.runtime.OffsetSnapshot` boundary arrays
+  entering a compiled step may be consumed **only** by slice-style
+  indexing and cheap shape/arithmetic ops (the cost-tape pattern
+  ``bounds[1:] - bounds[:-1]``); an offset-derived value flowing into
+  anything else — above all a callback — means the program's behaviour
+  depends on balance state in a way feedback replay cannot account for.
+* **JA003** — a ``mode="bridge"`` step must contain **exactly** the
+  expected callback count: one fused q/k/v callback plus one ``wo`` per
+  attention layer when ``fused=True`` (one per projection otherwise), one
+  per MLP projection.
+* **JA004** — every bridge callback must be **ordered** (unordered or pure
+  callbacks can be elided/reordered by the compiler, which breaks the
+  measure→EMA→split sequencing).
+
+The walkers duck-type jaxprs (``.eqns`` / ``.jaxpr``) rather than importing
+``jax.core`` names, so they track jax versions.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from .findings import Finding
+
+__all__ = [
+    "RULES",
+    "iter_eqns",
+    "count_callbacks",
+    "audit_compiled",
+    "audit_bridge",
+    "expected_bridge_callbacks",
+    "trace_compiled_step",
+    "trace_bridged_step",
+    "TracedStep",
+    "run_pass",
+]
+
+RULES = {
+    "JA001": "host callback primitive inside a compiled (zero-callback) step",
+    "JA002": "offset boundary array consumed by a non-slice primitive "
+             "inside a compiled step",
+    "JA003": "bridged step callback count differs from the per-layer "
+             "contract",
+    "JA004": "bridge callback is not an ordered io_callback",
+}
+
+# Primitives an offset boundary array may legally flow through inside a
+# compiled step: slice-style indexing plus the cost-tape arithmetic
+# (bounds[1:] - bounds[:-1], dtype casts, packing into tape outputs).
+_ALLOWED_OFFSET_PRIMS = {
+    "slice", "dynamic_slice", "gather", "squeeze", "reshape",
+    "broadcast_in_dim", "convert_element_type", "sub", "add",
+    "concatenate", "transpose", "copy", "stop_gradient",
+    # index clamping emitted by lax.dynamic_slice on traced starts
+    "lt", "le", "gt", "ge", "eq", "select_n", "max", "min", "clamp",
+}
+
+
+# ------------------------------------------------------------ jaxpr walking --
+def _as_jaxpr(obj):
+    """Unwrap ClosedJaxpr -> Jaxpr (duck-typed)."""
+    inner = getattr(obj, "jaxpr", None)
+    return inner if inner is not None and hasattr(inner, "eqns") else obj
+
+
+def _sub_jaxprs(params: dict) -> list:
+    """All jaxprs nested in an eqn's params (pjit/closed_call/scan/cond...)."""
+    subs = []
+    for value in params.values():
+        items = value if isinstance(value, (list, tuple)) else (value,)
+        for item in items:
+            if hasattr(item, "eqns"):
+                subs.append(item)
+            elif hasattr(item, "jaxpr") and hasattr(item.jaxpr, "eqns"):
+                subs.append(item.jaxpr)
+    return subs
+
+
+def iter_eqns(jaxpr) -> Iterable:
+    """Every eqn of ``jaxpr`` (Jaxpr or ClosedJaxpr), recursing into
+    closed/higher-order sub-jaxprs."""
+    j = _as_jaxpr(jaxpr)
+    for eqn in j.eqns:
+        yield eqn
+        for sub in _sub_jaxprs(eqn.params):
+            yield from iter_eqns(sub)
+
+
+def _is_callback(eqn) -> bool:
+    return "callback" in eqn.primitive.name
+
+
+def count_callbacks(jaxpr) -> Dict[str, int]:
+    """Callback primitive name -> occurrence count, recursive."""
+    counts: Dict[str, int] = {}
+    for eqn in iter_eqns(jaxpr):
+        if _is_callback(eqn):
+            name = eqn.primitive.name
+            counts[name] = counts.get(name, 0) + 1
+    return counts
+
+
+def _is_literal(var) -> bool:
+    return hasattr(var, "val")
+
+
+def _taint_walk(jaxpr, tainted: set, sink_names: set) -> List[int]:
+    """Propagate offset taint through one jaxpr; records disallowed sink
+    primitive names into ``sink_names``; returns tainted outvar indices."""
+    j = _as_jaxpr(jaxpr)
+    for eqn in j.eqns:
+        hit = [i for i, v in enumerate(eqn.invars)
+               if not _is_literal(v) and v in tainted]
+        if not hit:
+            continue
+        name = eqn.primitive.name
+        subs = _sub_jaxprs(eqn.params)
+        if subs and len(subs) == 1 and \
+                len(_as_jaxpr(subs[0]).invars) == len(eqn.invars):
+            # call-like (pjit / closed_call / remat): positional mapping
+            sub = _as_jaxpr(subs[0])
+            sub_tainted = {sub.invars[i] for i in hit}
+            for i in _taint_walk(sub, sub_tainted, sink_names):
+                tainted.add(eqn.outvars[i])
+        elif _is_callback(eqn):
+            sink_names.add(name)
+        elif name in _ALLOWED_OFFSET_PRIMS:
+            for v in eqn.outvars:
+                tainted.add(v)
+        else:
+            sink_names.add(name)
+    return [i for i, v in enumerate(j.outvars)
+            if not _is_literal(v) and v in tainted]
+
+
+# ---------------------------------------------------------------- auditors --
+def audit_compiled(jaxpr, offset_invars: Tuple[int, ...] = (), *,
+                   where: str = "compiled step") -> List[Finding]:
+    """JA001 + JA002 over a traced compiled step.  ``offset_invars`` are
+    flat invar positions holding OffsetSnapshot boundary arrays."""
+    findings: List[Finding] = []
+    for name, n in sorted(count_callbacks(jaxpr).items()):
+        findings.append(Finding(
+            rule="JA001", severity="error", location=f"jaxpr:{where}",
+            message=f"compiled step contains {n} {name} primitive(s); "
+                    f"the zero-callback contract is broken"))
+    j = _as_jaxpr(jaxpr)
+    tainted = {j.invars[i] for i in offset_invars if i < len(j.invars)}
+    if tainted:
+        sinks: set = set()
+        _taint_walk(jaxpr, tainted, sinks)
+        for name in sorted(sinks):
+            findings.append(Finding(
+                rule="JA002", severity="error", location=f"jaxpr:{where}",
+                message=f"offset boundary array flows into {name!r}; "
+                        f"offsets may only be consumed via slice-style "
+                        f"indexing (the cost-tape pattern)"))
+    return findings
+
+
+def audit_bridge(jaxpr, expected: Optional[int] = None, *,
+                 where: str = "bridged step") -> List[Finding]:
+    """JA003 + JA004 over a traced bridge-mode step."""
+    findings: List[Finding] = []
+    n_io = 0
+    for eqn in iter_eqns(jaxpr):
+        if not _is_callback(eqn):
+            continue
+        name = eqn.primitive.name
+        if name == "io_callback":
+            n_io += 1
+            if not eqn.params.get("ordered", False):
+                findings.append(Finding(
+                    rule="JA004", severity="error",
+                    location=f"jaxpr:{where}",
+                    message="io_callback without ordered=True; the bridge "
+                            "requires ordered callbacks so shard dispatch "
+                            "follows program order"))
+        elif name != "debug_callback":
+            findings.append(Finding(
+                rule="JA004", severity="error", location=f"jaxpr:{where}",
+                message=f"bridge step routes a projection through "
+                        f"{name}; only ordered io_callback is allowed"))
+    if expected is not None and n_io != expected:
+        findings.append(Finding(
+            rule="JA003", severity="error", location=f"jaxpr:{where}",
+            message=f"bridged step contains {n_io} io_callback(s), "
+                    f"expected {expected} (one fused q/k/v + one wo per "
+                    f"attention layer, one per MLP projection)"))
+    return findings
+
+
+# --------------------------------------------------------- trunk frontends --
+@dataclass(frozen=True)
+class TracedStep:
+    """A traced step plus where its offset arrays sit in the flat invars."""
+
+    jaxpr: object                       # ClosedJaxpr from jax.make_jaxpr
+    offset_invars: Tuple[int, ...] = ()
+    mode: str = "compiled"
+    label: str = "step"
+
+
+def expected_bridge_callbacks(trunk) -> int:
+    """The per-layer callback contract for a bridge-mode trunk: fused
+    attention is one fused q/k/v callback plus one ``wo``; unfused is one
+    per attention projection; dense MLP is one per banked projection."""
+    cfg = trunk.cfg
+    period_len = len(cfg.period())
+    total = 0
+    for i, (mixer, ffn) in enumerate(cfg.layer_plan()):
+        j = i % period_len
+        if mixer == "attn":
+            present = [n for n in ("wq", "wk", "wv", "wo")
+                       if (j, "attn", n) in trunk.bank]
+            if trunk.fused and all(
+                    n in present for n in ("wq", "wk", "wv")):
+                total += 1 + (1 if "wo" in present else 0)
+            else:
+                total += len(present)
+        if ffn == "dense":
+            total += sum(1 for k in trunk.bank if k[0] == j and k[1] == "ffn")
+    return total
+
+
+def trace_compiled_step(cfg, params, trunk, *, isa: str = "membw",
+                        batch: int = 1, max_seq: int = 8) -> TracedStep:
+    """Trace one full compiled decode step (trunk projections + head +
+    cost tape) exactly as the engine runs it, and locate the offset
+    arrays among the flat invars for the taint audit."""
+    import jax
+    import jax.numpy as jnp
+    from jax.tree_util import tree_leaves
+
+    from repro.models.transformer import forward, init_state
+
+    state = init_state(cfg, batch, max_seq)
+    tok = jnp.zeros((batch, 1), jnp.int32)
+    offsets = trunk.compiled_refresh()
+
+    def step(p, t, s, offs):
+        tape = trunk.compiled_tape_begin()
+        out = forward(cfg, p, t, state=s, apply_head=False, trunk=trunk,
+                      trunk_isa=isa, trunk_offsets=offs)
+        logits = trunk.apply_head(out.logits[:, -1, :], isa=isa,
+                                  offsets=offs)
+        return logits, out.state, trunk.compiled_tape_end(tape)
+
+    closed = jax.make_jaxpr(step)(params, tok, state, offsets)
+    lead = len(tree_leaves((params, tok, state)))
+    n_off = len(tree_leaves(offsets))
+    return TracedStep(jaxpr=closed,
+                      offset_invars=tuple(range(lead, lead + n_off)),
+                      mode="compiled", label="compiled decode step")
+
+
+def trace_bridged_step(cfg, params, trunk, *, isa: str = "membw",
+                       batch: int = 1, max_seq: int = 8) -> TracedStep:
+    """Trace one bridge-mode decode step (projections only; the head is
+    applied host-side outside the jit in bridge mode)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.transformer import forward, init_state
+
+    state = init_state(cfg, batch, max_seq)
+    tok = jnp.zeros((batch, 1), jnp.int32)
+
+    def step(p, t, s):
+        out = forward(cfg, p, t, state=s, apply_head=False, trunk=trunk,
+                      trunk_isa=isa)
+        return out.logits[:, -1, :], out.state
+
+    closed = jax.make_jaxpr(step)(params, tok, state)
+    return TracedStep(jaxpr=closed, offset_invars=(), mode="bridge",
+                      label="bridged decode step")
+
+
+def audit_step(step: TracedStep, *, expected: Optional[int] = None) -> List[Finding]:
+    if step.mode == "compiled":
+        return audit_compiled(step.jaxpr, step.offset_invars,
+                              where=step.label)
+    return audit_bridge(step.jaxpr, expected, where=step.label)
+
+
+# --------------------------------------------------------------- CLI pass --
+def run_pass(log=None) -> List[Finding]:
+    """Trace the reduced trunk in both modes and audit every contract,
+    including each projection kind and the head standalone.  Used by
+    ``python -m repro.analysis audit``."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import reduced_config
+    from repro.kernels.dispatch import GEMV_ISA, HybridKernelDispatcher
+    from repro.models import BalancedTrunk, init_params
+
+    log = log or (lambda s: None)
+    findings: List[Finding] = []
+
+    cfg = reduced_config("granite-8b")
+    params = init_params(cfg, jax.random.key(0))
+    disp = HybridKernelDispatcher.virtual("ultra-125h", execute=True)
+    try:
+        compiled = BalancedTrunk.from_params(cfg, params, disp, quant="q4",
+                                             mode="compiled")
+        step = trace_compiled_step(cfg, params, compiled, isa=GEMV_ISA)
+        got = audit_step(step)
+        findings.extend(got)
+        log(f"audit: {step.label}: "
+            f"{sum(count_callbacks(step.jaxpr).values())} callback(s), "
+            f"{len(got)} finding(s)")
+
+        # each projection kind + head, traced standalone
+        offsets = compiled.compiled_refresh()
+        rng = np.random.default_rng(0)
+        x_d = jnp.asarray(rng.standard_normal(
+            (2, cfg.d_model)).astype(np.float32))
+        x_ff = jnp.asarray(rng.standard_normal(
+            (2, cfg.d_ff)).astype(np.float32))
+        sites = [(g, n) for (j, g, n) in sorted(compiled.bank) if j == 0]
+        for group, name in sites:
+            def one(offs, _g=group, _n=name):
+                proj = compiled.projector(0, 0, _g, GEMV_ISA, offsets=offs)
+                xin = x_ff if (_g, _n) == ("ffn", "wo") else x_d
+                return proj(_n, xin, None)
+
+            closed = jax.make_jaxpr(one)(offsets)
+            from jax.tree_util import tree_leaves
+            n_off = len(tree_leaves(offsets))
+            got = audit_compiled(closed, tuple(range(n_off)),
+                                 where=f"compiled {group}.{name}")
+            findings.extend(got)
+            log(f"audit: compiled {group}.{name}: "
+                f"{sum(count_callbacks(closed).values())} callback(s)")
+
+        def head(offs):
+            return compiled.apply_head(x_d, isa=GEMV_ISA, offsets=offs)
+
+        closed = jax.make_jaxpr(head)(offsets)
+        from jax.tree_util import tree_leaves
+        got = audit_compiled(closed,
+                             tuple(range(len(tree_leaves(offsets)))),
+                             where="compiled head")
+        findings.extend(got)
+        log(f"audit: compiled head: "
+            f"{sum(count_callbacks(closed).values())} callback(s)")
+
+        for fused in (False, True):
+            bridged = BalancedTrunk.from_params(
+                cfg, params, disp, quant="q4", pin_q4_blocks=True,
+                fused=fused)
+            step = trace_bridged_step(cfg, params, bridged, isa=GEMV_ISA)
+            want = expected_bridge_callbacks(bridged)
+            got = audit_step(step, expected=want)
+            findings.extend(got)
+            n_io = count_callbacks(step.jaxpr).get("io_callback", 0)
+            log(f"audit: {step.label} (fused={fused}): {n_io} ordered "
+                f"io_callback(s), expected {want}, {len(got)} finding(s)")
+    finally:
+        disp.close()
+    return findings

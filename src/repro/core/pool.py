@@ -30,6 +30,8 @@ from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core import events as _ev
+
 __all__ = ["SubTask", "ThreadWorkerPool", "VirtualWorkerPool"]
 
 
@@ -62,6 +64,8 @@ class ThreadWorkerPool:
         self._tasks: list[List[SubTask]] = [[] for _ in range(n_workers)]
         self._times = np.zeros(n_workers)
         self._errors: list[Optional[BaseException]] = [None] * n_workers
+        self._region = 0
+        self._task_labels: list[Optional[str]] = [None] * n_workers
         self._go = [threading.Event() for _ in range(n_workers)]
         self._done = [threading.Event() for _ in range(n_workers)]
         self._stop = False
@@ -79,6 +83,9 @@ class ThreadWorkerPool:
             if self._stop:
                 return
             t0 = time.perf_counter()
+            label = self._task_labels[i]
+            if label is not None:
+                _ev.push_task(label)
             # A raising shard fn must not kill the worker thread: run()
             # joins on _done (a dead thread would deadlock it) and
             # re-raises the stored error on the caller's side.
@@ -90,6 +97,8 @@ class ThreadWorkerPool:
                 self._errors[i] = e
             finally:
                 self._times[i] = time.perf_counter() - t0
+                if label is not None:
+                    _ev.pop_task()
                 self._done[i].set()
 
     def run(self, subtasks: Sequence[SubTask]) -> np.ndarray:
@@ -106,11 +115,22 @@ class ThreadWorkerPool:
             if st.size > 0:
                 self._tasks[st.worker].append(st)
         active = [w for w in range(self.n_workers) if self._tasks[w]]
+        tracing = _ev.TRACER is not None
+        self._region += 1
         for w in active:
+            if tracing:
+                label = f"{_ev.label(self)}/r{self._region}/w{w}"
+                self._task_labels[w] = label
+                _ev.emit_fork(label, where="ThreadWorkerPool.run")
+            else:
+                self._task_labels[w] = None
             self._done[w].clear()
             self._go[w].set()
         for w in active:
             self._done[w].wait()
+            if tracing and self._task_labels[w] is not None:
+                _ev.emit_join(self._task_labels[w],
+                              where="ThreadWorkerPool.run")
         errors = [e for e in self._errors if e is not None]
         if errors:
             # chain concurrent failures so none is silently discarded —
@@ -146,17 +166,41 @@ class VirtualWorkerPool:
         self.isa = isa
         self.execute = execute
         self.clock = 0.0
+        self._region = 0
 
     def run(self, subtasks: Sequence[SubTask]) -> np.ndarray:
         times = np.zeros(self.n_workers)
+        # Sub-tasks execute sequentially here, but each (region, worker) is
+        # its own *logical* task for the race detector: fork/join are the
+        # only ordering edges a real parallel pool would provide, so the
+        # replayed schedule exposes synchronization bugs this virtual
+        # execution merely masks.
+        tracing = _ev.TRACER is not None
+        forked: dict = {}
+        if tracing:
+            self._region += 1
         for st in subtasks:
             if st.size <= 0:
                 continue
-            if self.execute and st.fn is not None:
-                st.fn(st.start, st.size)
+            if tracing:
+                label = forked.get(st.worker)
+                if label is None:
+                    label = f"{_ev.label(self)}/r{self._region}/w{st.worker}"
+                    forked[st.worker] = label
+                    _ev.emit_fork(label, where="VirtualWorkerPool.run")
+                _ev.push_task(label)
+            try:
+                if self.execute and st.fn is not None:
+                    st.fn(st.start, st.size)
+            finally:
+                if tracing:
+                    _ev.pop_task()
             times[st.worker] += self.machine.task_time(
                 st.worker, self.isa, st.work, self.clock + times[st.worker]
             )
+        if tracing:
+            for label in forked.values():
+                _ev.emit_join(label, where="VirtualWorkerPool.run")
         self.clock += float(times.max(initial=0.0))
         return times
 

@@ -20,6 +20,8 @@ import threading
 from dataclasses import dataclass, field
 from typing import Any, Dict, Hashable, Optional, Sequence, Tuple
 
+from repro.core import events as _ev
+
 __all__ = ["KernelTuner", "TunerStore", "shape_class"]
 
 
@@ -60,6 +62,10 @@ class KernelTuner:
 
     def select(self, key: Hashable, configs: Sequence[Hashable]) -> Hashable:
         with self._lock:
+            if _ev.TRACER is not None:
+                _ev.emit_acquire(self._lock, where="KernelTuner.select")
+                _ev.emit_read(self, "tables", where="KernelTuner.select")
+                _ev.emit_release(self._lock, where="KernelTuner.select")
             tab = self._table(key, configs)
             cold = [c for c in configs if tab[c].count < self.min_trials]
             if cold:
@@ -68,12 +74,18 @@ class KernelTuner:
 
     def report(self, key: Hashable, config: Hashable, seconds: float) -> None:
         with self._lock:
+            if _ev.TRACER is not None:
+                _ev.emit_acquire(self._lock, where="KernelTuner.report")
+                _ev.emit_read(self, "tables", where="KernelTuner.report")
+                _ev.emit_write(self, "tables", where="KernelTuner.report")
             e = self._tables.setdefault(key, {}).setdefault(config, _Entry())
             if e.count == 0 or not math.isfinite(e.ema):
                 e.ema = seconds
             else:
                 e.ema = self.alpha * e.ema + (1.0 - self.alpha) * seconds
             e.count += 1
+            if _ev.TRACER is not None:
+                _ev.emit_release(self._lock, where="KernelTuner.report")
 
     def best(self, key: Hashable) -> Hashable:
         with self._lock:
@@ -168,8 +180,14 @@ class TunerStore:
         leaves ``tuner`` untouched) when nothing compatible is stored — a
         different ``alpha`` changes the filter the stored EMAs were
         produced under and is refused rather than blended (same contract
-        as :meth:`repro.runtime.RatioStore.load_into`)."""
-        stored = self.load()
+        as :meth:`repro.runtime.RatioStore.load_into`).  A torn or corrupt
+        file (a crashed writer predating the atomic rename, or a truncated
+        copy) is treated as "nothing stored": warm-start is an
+        optimization, so a cold start beats crashing the serve."""
+        try:
+            stored = self.load()
+        except (json.JSONDecodeError, KeyError, TypeError, ValueError):
+            return False
         if stored is None or stored.alpha != tuner.alpha:
             return False
         with tuner._lock:

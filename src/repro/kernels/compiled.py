@@ -368,7 +368,6 @@ class CompiledDispatcher:
                         label=f"{kspec.name}@{kspec.table_key}",
                         bytes_moved=moved)
         if moved > 0 and st.makespan > 0:
-            topo._bytes[spec.isa] = topo._bytes.get(spec.isa, 0.0) + moved
-            topo._busy[spec.isa] = topo._busy.get(spec.isa, 0.0) + st.makespan
+            topo._account(spec.isa, moved, st.makespan)
         if topo.keep_stats:
             topo.stats.append(st)

@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import functools
 import os
+import threading
 import time
 from typing import Callable, Dict, Optional
 
@@ -65,6 +66,7 @@ if (os.cpu_count() or 1) <= 2:
     except (AttributeError, KeyError):  # jax without the flag
         pass
 
+from repro.core import events as _ev
 from repro.core.hybrid_sim import SimulatedHybridCPU, make_machine
 from repro.core.pool import SubTask, ThreadWorkerPool, VirtualWorkerPool
 from repro.core.tuner import KernelTuner, shape_class
@@ -232,6 +234,10 @@ class HybridKernelDispatcher:
         self._balancers: Dict[tuple, Balancer] = {}
         self._bytes: Dict[str, float] = {}
         self._busy: Dict[str, float] = {}
+        # bytes/busy accounting is a read-modify-write on plain dicts;
+        # shard reports may arrive from concurrent regions (threaded
+        # pools, future async serving), so the accumulation is locked
+        self._acct_lock = threading.Lock()
 
     # ------------------------------------------------------- constructors --
     @classmethod
@@ -314,14 +320,27 @@ class HybridKernelDispatcher:
                         label=f"{spec.name}@{spec.table_key}",
                         bytes_moved=moved)
         if moved > 0 and st.makespan > 0:
-            self._bytes[spec.isa] = self._bytes.get(spec.isa, 0.0) + moved
-            self._busy[spec.isa] = self._busy.get(spec.isa, 0.0) + st.makespan
+            self._account(spec.isa, moved, st.makespan)
         if self.keep_stats:
             self.stats.append(st)
         self.last_stats = st
         return st
 
     # ----------------------------------------------------------- telemetry --
+    def _account(self, isa: str, moved: float, busy: float) -> None:
+        """Accrue one region's bytes/busy under the accounting lock."""
+        with self._acct_lock:
+            if _ev.TRACER is not None:
+                where = f"{type(self).__name__}._account"
+                _ev.emit_acquire(self._acct_lock, where=where)
+                _ev.emit_read(self, f"bytes[{isa}]", where=where)
+                _ev.emit_write(self, f"bytes[{isa}]", where=where)
+            self._bytes[isa] = self._bytes.get(isa, 0.0) + moved
+            self._busy[isa] = self._busy.get(isa, 0.0) + busy
+            if _ev.TRACER is not None:
+                _ev.emit_release(self._acct_lock,
+                                 where=f"{type(self).__name__}._account")
+
     def reset_bandwidth_accounting(self) -> None:
         """Zero the cumulative bytes/busy counters (steady-state windows:
         warm the ratio tables first, reset, then measure)."""

@@ -25,6 +25,8 @@ from typing import Optional, Protocol, runtime_checkable
 
 import numpy as np
 
+from repro.analysis import invariants as _contracts
+
 from .policy import BalancePolicy, Plan
 
 __all__ = [
@@ -155,7 +157,12 @@ class Balancer:
         self.stats: list = []
 
     def plan(self, total: int) -> Plan:
-        return self.policy.plan(total)
+        plan = self.policy.plan(total)
+        if _contracts.contracts_enabled():
+            _contracts.check_plan_partition(
+                plan.counts, total,
+                where=f"Balancer.plan[{plan.key}]")
+        return plan
 
     def report(self, plan: Plan, times, *, update: bool = True,
                label: Optional[str] = None,

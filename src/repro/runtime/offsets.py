@@ -34,6 +34,8 @@ from typing import Callable, Dict
 
 import numpy as np
 
+from repro.analysis import invariants as _contracts
+
 __all__ = ["OffsetSpec", "OffsetSnapshot"]
 
 
@@ -106,6 +108,10 @@ class OffsetSnapshot:
                     f"{name!r} (expected {spec.total})")
             bounds = np.zeros(len(counts) + 1, dtype=np.int32)
             np.cumsum(counts, out=bounds[1:])
+            if _contracts.contracts_enabled():
+                _contracts.check_offset_boundaries(
+                    bounds, spec.total,
+                    where=f"OffsetSnapshot.refresh[{name}]")
             self._host[name] = bounds
             device[name] = jnp.asarray(bounds)
         self._device = device

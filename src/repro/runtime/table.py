@@ -38,6 +38,8 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro.analysis import invariants as _contracts
+from repro.core import events as _ev
 from repro.core.ratio import ema_update, observed_ratios
 
 __all__ = ["RatioTable", "RatioStore"]
@@ -100,6 +102,10 @@ class RatioTable:
             raise ValueError("times must have one entry per worker")
         if units is None:
             observed = observed_ratios(pr, times, normalize=self.normalize)
+            if _contracts.contracts_enabled():
+                valid = np.isfinite(times) & (times > 0) & (pr > 0)
+                _contracts.check_observation(observed, valid, self.normalize,
+                                             where=f"RatioTable.update[{key}]")
         else:
             units = np.asarray(units, dtype=np.float64)
             if units.shape != pr.shape:
@@ -118,6 +124,9 @@ class RatioTable:
                     scale = (float(valid.sum()) if self.normalize == "mean"
                              else 1.0)
                     observed[valid] = speed[valid] / denom * scale
+            if _contracts.contracts_enabled():
+                _contracts.check_observation(observed, valid, self.normalize,
+                                             where=f"RatioTable.update[{key}]")
         return self.observe(key, observed)
 
     def observe(self, key: str, observed) -> np.ndarray:
@@ -127,7 +136,13 @@ class RatioTable:
         ``ema_update`` call site."""
         pr = self.ratios(key)
         observed = np.asarray(observed, dtype=np.float64)
+        if _ev.TRACER is not None:
+            _ev.emit_read(self, f"tables[{key}]", where="RatioTable.observe")
+            _ev.emit_write(self, f"tables[{key}]", where="RatioTable.observe")
         new = ema_update(pr, observed, self.alpha)
+        if _contracts.contracts_enabled():
+            _contracts.check_ema_step(pr, observed, new,
+                                      where=f"RatioTable.observe[{key}]")
         self._tables[key] = new
         self._record(key, new)
         return new
@@ -203,8 +218,16 @@ class RatioStore:
         versa) is off by a factor of ``n_workers`` and would corrupt the
         learned ratios, and a different ``alpha`` silently changes the
         filter the stored history was produced under — both are refused
-        rather than blended."""
-        stored = self.load()
+        rather than blended.
+
+        A torn or corrupt file (a crashed writer predating the atomic
+        rename, or a truncated copy) is treated as "nothing stored":
+        warm-start is an optimization, so a cold start beats crashing the
+        serve."""
+        try:
+            stored = self.load()
+        except (json.JSONDecodeError, KeyError, TypeError, ValueError):
+            return False
         if (stored is None or stored.n_workers != table.n_workers
                 or stored.normalize != table.normalize
                 or stored.alpha != table.alpha):

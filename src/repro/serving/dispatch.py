@@ -27,6 +27,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core import events as _ev
 from repro.runtime import Plan, RatioTable, RegionStats, StatsSink
 
 from .engine import ContinuousBatchingEngine
@@ -78,6 +79,10 @@ class InflightDispatcher:
             raise IndexError(f"replica {i} out of range")
         self.active[i] = bool(active)
         if not active:
+            if _ev.TRACER is not None:
+                for phase in self._acc:
+                    _ev.emit_write(self, f"acc[{phase}]",
+                                   where="InflightDispatcher.set_active")
             for acc_u, acc_t in self._acc.values():
                 acc_u[i] = 0
                 acc_t[i] = 0.0
@@ -172,6 +177,14 @@ class InflightDispatcher:
              np.array([s.decode_seconds for s in stats])),
         ):
             acc_u, acc_t = self._acc[phase]
+            if _ev.TRACER is not None:
+                # the windowed accumulators are the dispatcher's shared
+                # mutable state: a failure monitor calling set_active()
+                # concurrently with step() would race this read-modify-write
+                _ev.emit_read(self, f"acc[{phase}]",
+                              where="InflightDispatcher.step")
+                _ev.emit_write(self, f"acc[{phase}]",
+                               where="InflightDispatcher.step")
             acc_u += units
             acc_t += times
             if (np.count_nonzero(acc_u) >= 2

@@ -41,11 +41,14 @@ bind to a :class:`TopologyDispatcher` unchanged.
 
 from __future__ import annotations
 
+import threading
 from typing import Callable, Dict, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import invariants as _contracts
+from repro.core import events as _ev
 from repro.core.tuner import KernelTuner
 from repro.kernels.dispatch import GEMV_ISA, HybridKernelDispatcher
 from repro.quant.q4 import BYTES_PER_ELEM, QuantizedLinear
@@ -113,6 +116,10 @@ class TopologyDispatcher:
         self._balancers: Dict[tuple, Balancer] = {}
         self._bytes: Dict[str, float] = {}
         self._busy: Dict[str, float] = {}
+        # concurrent shard reports (per-socket regions finishing together,
+        # future async serving) must not interleave the aggregate
+        # read-modify-write — the race the analysis pass flags as RC001
+        self._acct_lock = threading.Lock()
         # id(weight) -> (weight kept alive, per-socket contiguous ranges)
         self._placement: Dict[int, Tuple[object, Ranges]] = {}
         self._default_ranges: Dict[int, Ranges] = {}
@@ -199,6 +206,9 @@ class TopologyDispatcher:
         bal = self._balancer(spec)
         plan = bal.plan(total)
         placement = self.placement_for(weight, total)
+        check = _contracts.contracts_enabled()
+        inner_before = sum(d._bytes.get(spec.isa, 0.0)
+                           for d in self.socket_dispatchers) if check else 0.0
         times = np.zeros(self.n_sockets)
         for s, (lo, hi) in enumerate(plan.ranges):
             if hi <= lo:
@@ -212,11 +222,30 @@ class TopologyDispatcher:
         # Sockets run concurrently: the region occupies max(times) wall
         # seconds while moving the sum of the per-socket traffic.
         if moved > 0 and st.makespan > 0:
-            self._bytes[spec.isa] = self._bytes.get(spec.isa, 0.0) + moved
-            self._busy[spec.isa] = self._busy.get(spec.isa, 0.0) + st.makespan
+            self._account(spec.isa, moved, st.makespan)
+            if check:
+                inner_after = sum(d._bytes.get(spec.isa, 0.0)
+                                  for d in self.socket_dispatchers)
+                _contracts.check_bytes_conserved(
+                    moved, inner_after - inner_before,
+                    where=f"TopologyDispatcher._split[{spec.name}]")
         if self.keep_stats:
             self.stats.append(st)
         return st
+
+    def _account(self, isa: str, moved: float, busy: float) -> None:
+        """Accrue one region's aggregate bytes/busy under the lock."""
+        with self._acct_lock:
+            if _ev.TRACER is not None:
+                where = "TopologyDispatcher._account"
+                _ev.emit_acquire(self._acct_lock, where=where)
+                _ev.emit_read(self, f"bytes[{isa}]", where=where)
+                _ev.emit_write(self, f"bytes[{isa}]", where=where)
+            self._bytes[isa] = self._bytes.get(isa, 0.0) + moved
+            self._busy[isa] = self._busy.get(isa, 0.0) + busy
+            if _ev.TRACER is not None:
+                _ev.emit_release(self._acct_lock,
+                                 where="TopologyDispatcher._account")
 
     # ------------------------------------------------------------ dispatch --
     def dispatch(self, spec: KernelSpec, total: int,

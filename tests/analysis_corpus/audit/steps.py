@@ -1,0 +1,93 @@
+"""Corpus: minimal traced steps for each jaxpr-audit contract.
+
+Each builder returns a ClosedJaxpr (plus metadata where needed) that the
+tests feed to ``audit_compiled`` / ``audit_bridge``.  The shapes mimic the
+real decode step at toy scale: ``bounds`` plays the OffsetSnapshot
+boundary array, ``x`` the activations.
+"""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import io_callback
+
+
+def _bounds():
+    return jnp.asarray(np.array([0, 2, 4], dtype=np.int32))
+
+
+def _x():
+    return jnp.ones((4,), jnp.float32)
+
+
+# --------------------------------------------------------------- compiled --
+def good_compiled():
+    """Zero callbacks; bounds consumed only via the cost-tape pattern
+    (slice / sub / cast) and a dynamic-slice shard pick."""
+
+    def step(bounds, x):
+        sizes = (bounds[1:] - bounds[:-1]).astype(jnp.int32)
+        shard = jax.lax.dynamic_slice(x, (bounds[0],), (2,))
+        return sizes, shard, x * 2.0
+
+    return jax.make_jaxpr(step)(_bounds(), _x())
+
+
+def bad_compiled_callback():
+    """JA001: an io_callback inside a compiled step."""
+
+    def step(x):
+        y = io_callback(lambda v: np.asarray(v),
+                        jax.ShapeDtypeStruct(x.shape, x.dtype), x,
+                        ordered=True)
+        return y + 1.0
+
+    return jax.make_jaxpr(step)(_x())
+
+
+def bad_compiled_offset_sink():
+    """JA002: an offset boundary array flowing into dense arithmetic."""
+
+    def step(bounds, x):
+        w = bounds[1:].astype(jnp.float32)
+        return x[:2] * w[:2]           # mul consumes offset-derived value
+
+    return jax.make_jaxpr(step)(_bounds(), _x())
+
+
+# ----------------------------------------------------------------- bridge --
+def _shape(x):
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+def good_bridge(n_callbacks: int = 2):
+    """``n_callbacks`` ordered io_callbacks, the bridge contract shape."""
+
+    def step(x):
+        for _ in range(n_callbacks):
+            x = io_callback(lambda v: np.asarray(v) + 1.0, _shape(x), x,
+                            ordered=True)
+        return x
+
+    return jax.make_jaxpr(step)(_x())
+
+
+def bad_bridge_unordered():
+    """JA004: an io_callback without ordered=True."""
+
+    def step(x):
+        return io_callback(lambda v: np.asarray(v), _shape(x), x,
+                           ordered=False)
+
+    return jax.make_jaxpr(step)(_x())
+
+
+def bad_bridge_pure_callback():
+    """JA004: a projection routed through pure_callback (elidable)."""
+
+    def step(x):
+        return jax.pure_callback(lambda v: np.asarray(v) * 2.0,
+                                 _shape(x), x)
+
+    return jax.make_jaxpr(step)(_x())

@@ -1,0 +1,19 @@
+"""Corpus: RL001 bad — wall-clock calls inside virtual-clock code."""
+# lint: virtual-clock-module
+
+import time
+from time import perf_counter as pc
+
+
+def advance(sim):
+    sim.now = time.perf_counter()      # flagged: module is virtual-clock
+    return sim.now
+
+
+def sample():
+    return pc()                        # flagged: aliased from-import
+
+
+class VirtualTicker:
+    def tick(self):
+        return time.monotonic()        # flagged: Virtual* class too

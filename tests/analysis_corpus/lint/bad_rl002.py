@@ -1,0 +1,9 @@
+"""Corpus: RL002 bad — raw ratio-table key literals outside the key
+constructors."""
+
+KEY = "membw/q4_matmul"                # flagged: module-level literal
+
+
+def update(table, times):
+    table.update("avx2/f32_matmul", times)      # flagged: call argument
+    return table.ratios("avx_vnni/int8_gemm")   # flagged

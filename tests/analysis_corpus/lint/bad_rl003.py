@@ -1,0 +1,13 @@
+"""Corpus: RL003 bad — pool run() off the join-or-propagate path."""
+
+
+def fire_and_forget(pool, tasks):
+    pool.run(tasks)                    # flagged: result discarded
+
+
+def swallow(worker_pool, tasks):
+    try:
+        times = worker_pool.run(tasks)
+        return times
+    except Exception:
+        pass                           # flagged: shard errors swallowed

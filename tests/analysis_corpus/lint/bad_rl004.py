@@ -1,0 +1,16 @@
+"""Corpus: RL004 bad — jitted closures capturing mutable ratio state."""
+
+import jax
+
+from repro.runtime import RatioTable
+
+table = RatioTable(4)
+
+
+@jax.jit
+def step(x):
+    return x * table.ratios("gemv")[0]     # flagged: free `table` baked in
+
+
+def make_step(runtime):
+    return jax.jit(lambda x: x + runtime.table.ratios("gemv")[0])  # flagged

@@ -1,0 +1,7 @@
+"""Corpus: RL005 bad — the EMA applied outside RatioTable.observe."""
+
+from repro.core.ratio import ema_update
+
+
+def refresh(pr, observed, alpha):
+    return ema_update(pr, observed, alpha)     # flagged: bypasses contracts

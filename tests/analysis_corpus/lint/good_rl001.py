@@ -1,0 +1,22 @@
+"""Corpus: RL001 good — virtual-clock module routing time through the
+machine model's clock; ``time`` may still be imported for sleep etc."""
+# lint: virtual-clock-module
+
+import time
+
+
+def advance(sim, clock):
+    sim.now = clock()          # clock injected by the machine model
+    return sim.now
+
+
+def backoff():
+    time.sleep(0)              # sleep is not a wall-clock *reading*
+
+
+class VirtualTicker:
+    def __init__(self, clock):
+        self._clock = clock
+
+    def tick(self):
+        return self._clock()

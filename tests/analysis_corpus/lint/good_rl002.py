@@ -1,0 +1,12 @@
+"""Corpus: RL002 good — keys built by the constructors; a raw key such as
+``membw/attn_proj`` may appear in prose (this docstring) without tripping
+the rule."""
+
+
+def update(table, times, kernel_key):
+    key = kernel_key("q4_matmul")      # constructed, never spelled
+    table.update(key, times)
+    return table.ratios(key)
+
+
+PINNED = "membw/q4_matmul"  # lint: allow(RL002) golden-file fixture name

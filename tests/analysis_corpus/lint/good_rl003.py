@@ -1,0 +1,14 @@
+"""Corpus: RL003 good — every pool run() joined and errors propagated."""
+
+
+def run_region(pool, tasks, region):
+    times = pool.run(tasks)            # joined: times fed back
+    region.record_times(times)
+    return times
+
+
+def run_with_cleanup(pool, tasks):
+    try:
+        return pool.run(tasks)
+    finally:
+        pool.close()                   # finally does not swallow

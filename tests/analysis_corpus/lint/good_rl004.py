@@ -1,0 +1,15 @@
+"""Corpus: RL004 good — ratio state enters jitted code as an argument
+(the OffsetSnapshot contract), never via closure."""
+
+import jax
+
+
+@jax.jit
+def step(x, ratios):
+    return x * ratios[0]               # ratios passed in each call
+
+
+def make_step(table):
+    snapshot = table.ratios("gemv").copy()      # read outside the jit
+    jitted = jax.jit(lambda x, r: x * r[0])
+    return lambda x: jitted(x, snapshot)

@@ -1,0 +1,6 @@
+"""Corpus: RL005 good — observations routed through RatioTable.observe,
+the one instrumented EMA call site."""
+
+
+def refresh(table, key, observed):
+    return table.observe(key, observed)

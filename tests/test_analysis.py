@@ -1,0 +1,411 @@
+"""Tests for the repro.analysis subsystem (PR 8).
+
+Four groups:
+
+* corpus — every lint/audit rule flags its known-bad fixture and passes its
+  known-good twin (``tests/analysis_corpus/``);
+* races — the vector-clock checker on synthetic schedules and on the real
+  dispatcher accounting (the satellite race fix's regression test);
+* invariants — each IV contract fires on bad inputs, stays silent on good,
+  and the enable/disable gating works;
+* persistence — RatioStore/TunerStore survive torn/corrupt files.
+"""
+
+import importlib.util
+import json
+import sys
+import threading
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis import invariants
+from repro.analysis.findings import Finding, format_findings
+from repro.analysis.invariants import ContractViolation
+from repro.analysis.jaxpr_audit import (audit_bridge, audit_compiled,
+                                        count_callbacks)
+from repro.analysis.lint import lint_file, lint_source
+from repro.analysis.races import find_races, trace
+from repro.core.events import Event
+
+CORPUS = Path(__file__).parent / "analysis_corpus"
+LINT_RULES = ["RL001", "RL002", "RL003", "RL004", "RL005"]
+
+
+def _load_corpus_module(relpath: str):
+    path = CORPUS / relpath
+    name = f"analysis_corpus_{path.stem}"
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[name] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ------------------------------------------------------------ lint corpus --
+@pytest.mark.parametrize("rule", LINT_RULES)
+def test_lint_flags_bad_fixture(rule):
+    findings = lint_file(CORPUS / "lint" / f"bad_{rule.lower()}.py")
+    assert findings, f"{rule} bad fixture produced no findings"
+    assert {f.rule for f in findings} == {rule}
+
+
+@pytest.mark.parametrize("rule", LINT_RULES)
+def test_lint_passes_good_fixture(rule):
+    findings = lint_file(CORPUS / "lint" / f"good_{rule.lower()}.py")
+    assert findings == [], format_findings(findings)
+
+
+def test_lint_allow_comment_suppresses():
+    src = 'import time\nnow = time.time()  # lint: allow(RL001)\n'
+    assert lint_source(src, "x.py", virtual=True) == []
+    src_other = 'import time\nnow = time.time()  # lint: allow(RL002)\n'
+    assert len(lint_source(src_other, "x.py", virtual=True)) == 1
+
+
+def test_lint_virtual_set_is_path_or_marker_based():
+    src = "import time\n\n\ndef f():\n    return time.perf_counter()\n"
+    # ordinary module: wall clocks are fine
+    assert lint_source(src, "repro/kernels/ops.py") == []
+    # path inside the virtual set: flagged
+    assert any(f.rule == "RL001"
+               for f in lint_source(src, "repro/topology/machine.py"))
+    # marker opts any file in
+    marked = "# lint: virtual-clock-module\n" + src
+    assert any(f.rule == "RL001" for f in lint_source(marked, "x.py"))
+
+
+def test_lint_syntax_error_is_reported_not_raised():
+    findings = lint_source("def broken(:\n", "x.py")
+    assert [f.rule for f in findings] == ["RL000"]
+
+
+def test_lint_clean_on_src_tree():
+    """The CI gate: the shipped source tree lints clean."""
+    from repro.analysis.lint import run_pass
+    findings = run_pass("src")
+    assert findings == [], format_findings(findings)
+
+
+# ----------------------------------------------------------- audit corpus --
+def test_audit_good_compiled_is_clean():
+    steps = _load_corpus_module("audit/steps.py")
+    jaxpr = steps.good_compiled()
+    assert audit_compiled(jaxpr, (0,), where="corpus good") == []
+    assert count_callbacks(jaxpr) == {}
+
+
+def test_audit_ja001_callback_in_compiled():
+    steps = _load_corpus_module("audit/steps.py")
+    findings = audit_compiled(steps.bad_compiled_callback(), ())
+    assert any(f.rule == "JA001" for f in findings)
+
+
+def test_audit_ja002_offset_sink():
+    steps = _load_corpus_module("audit/steps.py")
+    findings = audit_compiled(steps.bad_compiled_offset_sink(), (0,))
+    assert any(f.rule == "JA002" for f in findings)
+    assert any("mul" in f.message for f in findings)
+
+
+def test_audit_ja003_bridge_count_contract():
+    steps = _load_corpus_module("audit/steps.py")
+    jaxpr = steps.good_bridge(2)
+    assert audit_bridge(jaxpr, expected=2) == []
+    findings = audit_bridge(jaxpr, expected=3)
+    assert [f.rule for f in findings] == ["JA003"]
+
+
+def test_audit_ja004_unordered_and_pure_callbacks():
+    steps = _load_corpus_module("audit/steps.py")
+    got = audit_bridge(steps.bad_bridge_unordered(), expected=1)
+    assert any(f.rule == "JA004" for f in got)
+    got = audit_bridge(steps.bad_bridge_pure_callback())
+    assert any(f.rule == "JA004" for f in got)
+
+
+# -------------------------------------------------------- race detection --
+def _ev(kind, task, obj, field="", where=""):
+    return Event(kind=kind, task=task, obj=obj, field=field, where=where)
+
+
+def test_races_unsynchronized_writes_flagged():
+    events = [
+        _ev("fork", "main", "w0"),
+        _ev("fork", "main", "w1"),
+        _ev("write", "w0", "Disp#1", "bytes", where="a"),
+        _ev("write", "w1", "Disp#1", "bytes", where="b"),
+        _ev("join", "main", "w0"),
+        _ev("join", "main", "w1"),
+    ]
+    findings = find_races(events)
+    assert len(findings) == 1
+    assert findings[0].rule == "RC001"
+    assert "Disp#1" in findings[0].location
+
+
+def test_races_lock_ordered_accesses_clean():
+    events = [
+        _ev("fork", "main", "w0"),
+        _ev("fork", "main", "w1"),
+        _ev("acquire", "w0", "lock"),
+        _ev("write", "w0", "Disp#1", "bytes"),
+        _ev("release", "w0", "lock"),
+        _ev("acquire", "w1", "lock"),
+        _ev("write", "w1", "Disp#1", "bytes"),
+        _ev("release", "w1", "lock"),
+    ]
+    assert find_races(events) == []
+
+
+def test_races_fork_join_ordered_accesses_clean():
+    events = [
+        _ev("write", "main", "Table#1", "t"),
+        _ev("fork", "main", "w0"),
+        _ev("write", "w0", "Table#1", "t"),
+        _ev("join", "main", "w0"),
+        _ev("write", "main", "Table#1", "t"),
+    ]
+    assert find_races(events) == []
+
+
+def test_races_concurrent_reads_clean():
+    events = [
+        _ev("fork", "main", "w0"),
+        _ev("fork", "main", "w1"),
+        _ev("read", "w0", "Table#1", "t"),
+        _ev("read", "w1", "Table#1", "t"),
+    ]
+    assert find_races(events) == []
+
+
+def test_races_read_write_conflict_flagged():
+    events = [
+        _ev("fork", "main", "w0"),
+        _ev("fork", "main", "w1"),
+        _ev("read", "w0", "Table#1", "t"),
+        _ev("write", "w1", "Table#1", "t"),
+    ]
+    findings = find_races(events)
+    assert len(findings) == 1
+
+
+def test_races_accounting_schedule_is_clean():
+    """Satellite regression: concurrent shard reports into the dispatcher's
+    bytes/busy aggregate go through the locked ``_account`` and replay
+    race-free; stripping the lock edges from the same schedule is flagged
+    (proving the lock is what makes it clean)."""
+    from repro.core.pool import SubTask, ThreadWorkerPool
+    from repro.kernels.dispatch import GEMV_ISA, HybridKernelDispatcher
+
+    d = HybridKernelDispatcher.threaded(4)
+    pool = ThreadWorkerPool(4)
+    try:
+        with trace() as rec:
+            subtasks = [
+                SubTask(worker=w, start=w, size=1, work=1.0,
+                        fn=lambda s, z: d._account(GEMV_ISA, 64.0, 1e-3))
+                for w in range(4)
+            ]
+            pool.run(subtasks)  # lint: allow(RL003) accounting-only schedule
+    finally:
+        pool.close()
+        d.close()
+    assert any(e.kind == "acquire" for e in rec.events)
+    assert find_races(rec.events) == []
+    # the counterfactual: same accesses without the lock edges race
+    unlocked = [e for e in rec.events if e.kind not in ("acquire", "release")]
+    assert any(f.rule == "RC001" for f in find_races(unlocked))
+
+
+def test_account_is_thread_safe_exact_totals():
+    """Satellite regression: hammering ``_account`` from 8 threads loses no
+    update — the totals are exact, not approximately right."""
+    from repro.kernels.dispatch import GEMV_ISA, HybridKernelDispatcher
+    from repro.topology.dispatch import TopologyDispatcher
+
+    flat = HybridKernelDispatcher.virtual("ultra-125h", execute=False)
+    topo = TopologyDispatcher("dual-125h", execute=False)
+    try:
+        n_threads, n_calls = 8, 200
+
+        def hammer(disp):
+            for _ in range(n_calls):
+                disp._account(GEMV_ISA, 1.0, 1e-6)
+
+        for disp in (flat, topo):
+            threads = [threading.Thread(target=hammer, args=(disp,))
+                       for _ in range(n_threads)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            assert disp._bytes[GEMV_ISA] == float(n_threads * n_calls)
+            assert disp._busy[GEMV_ISA] == pytest.approx(
+                n_threads * n_calls * 1e-6)
+    finally:
+        flat.close()
+        topo.close()
+
+
+# -------------------------------------------------------------- contracts --
+def test_contracts_gating():
+    with invariants.contracts(True):
+        assert invariants.contracts_enabled()
+        with invariants.contracts(False):
+            assert not invariants.contracts_enabled()
+        assert invariants.contracts_enabled()
+
+
+def test_iv001_ema_envelope():
+    prev = np.array([1.0, 1.0])
+    obs = np.array([0.5, 2.0])
+    good = 0.3 * prev + 0.7 * obs
+    invariants.check_ema_step(prev, obs, good)
+    with pytest.raises(ContractViolation, match=r"IV001"):
+        invariants.check_ema_step(prev, obs, np.array([3.0, 1.5]))
+    with pytest.raises(ContractViolation, match=r"IV001"):
+        invariants.check_ema_step(prev, obs, np.array([np.nan, 1.0]))
+    with pytest.raises(ContractViolation, match=r"IV001"):
+        invariants.check_ema_step(prev, obs, np.array([-0.1, 1.0]))
+
+
+def test_iv002_observation_normalization():
+    valid = np.array([True, True, True, False])
+    obs = np.array([0.5, 1.0, 1.5, 7.0])   # mean over valid = 1
+    invariants.check_observation(obs, valid, "mean")
+    with pytest.raises(ContractViolation, match=r"IV002"):
+        invariants.check_observation(obs * 2, valid, "mean")
+    shares = np.array([0.2, 0.3, 0.5, 7.0])  # sum over valid = 1
+    invariants.check_observation(shares, valid, "sum")
+    with pytest.raises(ContractViolation, match=r"IV002"):
+        invariants.check_observation(shares * 2, valid, "sum")
+    # singleton measurement: carried over, never checked
+    invariants.check_observation(np.array([5.0, 1.0]),
+                                 np.array([True, False]), "mean")
+
+
+def test_iv003_offset_boundaries():
+    good = np.array([0, 2, 4, 8], dtype=np.int32)
+    invariants.check_offset_boundaries(good, 8)
+    with pytest.raises(ContractViolation, match=r"IV003"):
+        invariants.check_offset_boundaries(good.astype(np.int64), 8)
+    with pytest.raises(ContractViolation, match=r"IV003"):
+        invariants.check_offset_boundaries(
+            np.array([0, 2, 4], dtype=np.int32), 8)   # ends short of N
+    with pytest.raises(ContractViolation, match=r"IV003"):
+        invariants.check_offset_boundaries(
+            np.array([0, 4, 2, 8], dtype=np.int32), 8)  # not monotone
+    with pytest.raises(ContractViolation, match=r"IV003"):
+        invariants.check_offset_boundaries(
+            np.array([1, 4, 8], dtype=np.int32), 8)   # starts past 0
+
+
+def test_iv004_plan_partition():
+    invariants.check_plan_partition(np.array([3, 0, 5]), 8)
+    with pytest.raises(ContractViolation, match=r"IV004"):
+        invariants.check_plan_partition(np.array([3, 4]), 8)   # gap
+    with pytest.raises(ContractViolation, match=r"IV004"):
+        invariants.check_plan_partition(np.array([5, 4]), 8)   # overlap
+    with pytest.raises(ContractViolation, match=r"IV004"):
+        invariants.check_plan_partition(np.array([-1, 9]), 8)  # negative
+
+
+def test_iv005_bytes_conserved():
+    invariants.check_bytes_conserved(1024.0, 1024.0)
+    with pytest.raises(ContractViolation, match=r"IV005"):
+        invariants.check_bytes_conserved(1024.0, 512.0)
+
+
+def test_contracts_live_in_ratio_table_and_offsets():
+    """The instrumented hot paths run their checks when contracts are on
+    (and a deliberately broken planner is caught)."""
+    from repro.runtime import OffsetSnapshot, OffsetSpec, RatioTable
+
+    with invariants.contracts(True):
+        table = RatioTable(4, alpha=0.3)
+        rng = np.random.default_rng(0)
+        for _ in range(8):
+            table.update("gemv", rng.uniform(0.5, 2.0, size=4))
+
+        snap = OffsetSnapshot(lambda spec: np.array([1, 3], dtype=np.int64))
+        snap.register(OffsetSpec(name="k", total=4, granularity=1))
+        snap.refresh()   # 1 + 3 == 4: clean
+
+        # a broken planner returning a negative count still sums to total
+        # (passing the snapshot's own sum check) but breaks monotonicity
+        bad = OffsetSnapshot(lambda spec: np.array([6, -1], dtype=np.int64))
+        bad.register(OffsetSpec(name="k", total=5, granularity=1))
+        with pytest.raises(ContractViolation, match=r"IV003"):
+            bad.refresh()
+
+
+def test_invariants_run_pass_clean():
+    from repro.analysis.invariants import run_pass
+    assert run_pass() == []
+
+
+# ------------------------------------------------------------ persistence --
+def test_ratio_store_tolerates_torn_file(tmp_path):
+    from repro.runtime import RatioTable
+    from repro.runtime.table import RatioStore
+
+    path = tmp_path / "ratios.json"
+    store = RatioStore(str(path))
+    table = RatioTable(4, alpha=0.3)
+    table.set("gemv", np.array([1.0, 1.1, 0.9, 1.0]))
+    store.save(table)
+    # no stray temp files after the atomic rename
+    assert [p.name for p in tmp_path.iterdir()] == ["ratios.json"]
+
+    # simulate a torn write: truncate the file mid-JSON
+    full = path.read_text()
+    path.write_text(full[: len(full) // 2])
+    fresh = RatioTable(4, alpha=0.3)
+    assert store.load_into(fresh) is False
+    assert fresh.keys() == []          # untouched
+
+    # corrupt-but-valid JSON (wrong schema) is also a cold start
+    path.write_text(json.dumps({"version": 1, "tables": "nope"}))
+    assert store.load_into(fresh) is False
+
+    # and a healthy file round-trips
+    store.save(table)
+    assert store.load_into(fresh) is True
+    np.testing.assert_allclose(fresh.ratios("gemv"), table.ratios("gemv"))
+
+
+def test_tuner_store_tolerates_torn_file(tmp_path):
+    from repro.core.tuner import KernelTuner, TunerStore
+
+    path = tmp_path / "tuner.json"
+    store = TunerStore(str(path))
+    tuner = KernelTuner(alpha=0.3)
+    tuner.report("gemv", 128, 1e-3)
+    tuner.report("gemv", 256, 2e-3)
+    store.save(tuner)
+    assert [p.name for p in tmp_path.iterdir()] == ["tuner.json"]
+
+    full = path.read_text()
+    path.write_text(full[: len(full) // 2])
+    fresh = KernelTuner(alpha=0.3)
+    assert store.load_into(fresh) is False
+
+    path.write_text("{not json")
+    assert store.load_into(fresh) is False
+
+    store.save(tuner)
+    assert store.load_into(fresh) is True
+    assert fresh.select("gemv", [128, 256]) == tuner.select("gemv", [128, 256])
+
+
+# ------------------------------------------------------------- formatting --
+def test_finding_format_and_sort():
+    a = Finding(rule="RL001", severity="warning", location="x.py:1",
+                message="w")
+    b = Finding(rule="JA001", severity="error", location="y.py:2",
+                message="e")
+    out = format_findings([a, b])
+    assert out.index("JA001") < out.index("RL001")   # errors first
+    assert "x.py:1: warning: [RL001] w" in out

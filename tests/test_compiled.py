@@ -138,33 +138,25 @@ def test_compiled_projections_match_bridged(quant):
 def test_compiled_decode_step_has_zero_io_callbacks():
     """The whole compiled decode step — trunk projections AND head — traces
     without a single host callback; the bridged step carries one per
-    region (that's the raw-speed ceiling this PR removes)."""
-    from repro.models.transformer import forward, init_state
+    region (that's the raw-speed ceiling this PR removes).  The hand-rolled
+    ``str(jaxpr).count("io_callback")`` assertion now lives in
+    ``repro.analysis.jaxpr_audit``, which additionally walks closed calls
+    and taints the offset arrays (JA002)."""
+    from repro.analysis.jaxpr_audit import (
+        audit_step, count_callbacks, expected_bridge_callbacks,
+        trace_bridged_step, trace_compiled_step)
 
     cfg, params, disp, bridged, compiled = _trunks("q4")
-    state = init_state(cfg, 1, 8)
-    tok = jnp.zeros((1, 1), jnp.int32)
-    offsets = compiled.compiled_refresh()
 
-    def compiled_step(p, t, s, offs):
-        tape = compiled.compiled_tape_begin()
-        out = forward(cfg, p, t, state=s, apply_head=False, trunk=compiled,
-                      trunk_isa=GEMV_ISA, trunk_offsets=offs)
-        logits = compiled.apply_head(out.logits[:, -1, :], isa=GEMV_ISA,
-                                     offsets=offs)
-        return logits, out.state, compiled.compiled_tape_end(tape)
+    step = trace_compiled_step(cfg, params, compiled, isa=GEMV_ISA)
+    assert audit_step(step) == []            # JA001 + JA002 both clean
+    assert count_callbacks(step.jaxpr) == {}
 
-    def bridged_step(p, t, s):
-        out = forward(cfg, p, t, state=s, apply_head=False, trunk=bridged,
-                      trunk_isa=GEMV_ISA)
-        return out.logits[:, -1, :], out.state
-
-    n_compiled = str(jax.make_jaxpr(compiled_step)(
-        params, tok, state, offsets)).count("io_callback")
-    n_bridged = str(jax.make_jaxpr(bridged_step)(
-        params, tok, state)).count("io_callback")
-    assert n_compiled == 0
-    assert n_bridged > 0
+    bstep = trace_bridged_step(cfg, params, bridged, isa=GEMV_ISA)
+    want = expected_bridge_callbacks(bridged)
+    assert want > 0
+    assert audit_step(bstep, expected=want) == []   # JA003 + JA004 clean
+    assert count_callbacks(bstep.jaxpr).get("io_callback", 0) == want
 
 
 # -------------------------------------------------- engine token identity --

@@ -491,9 +491,14 @@ def test_fused_qkv_token_identical_to_per_matmul(jit_bridge):
 def test_fused_qkv_one_callback_per_attention_layer():
     """The jitted decode step carries one io_callback for q/k/v per
     attention layer (plus one each for wo / wi / wg / down): 4 fewer
-    round trips than the per-matmul path on the 2-layer reduced config."""
+    round trips than the per-matmul path on the 2-layer reduced config.
+    Counted and contract-checked through the jaxpr auditor rather than a
+    string count over the printed jaxpr."""
+    from repro.analysis.jaxpr_audit import (
+        audit_step, count_callbacks, expected_bridge_callbacks,
+        trace_bridged_step)
     from repro.configs import reduced_config
-    from repro.models import BalancedTrunk, forward, init_params, init_state
+    from repro.models import BalancedTrunk, init_params
 
     cfg = reduced_config("granite-8b")
     params = init_params(cfg, jax.random.key(0))
@@ -502,12 +507,11 @@ def test_fused_qkv_one_callback_per_attention_layer():
         disp = HybridKernelDispatcher.virtual("ultra-125h", execute=True)
         trunk = BalancedTrunk.from_params(cfg, params, disp, quant="fp32",
                                           fused=fused)
-        state = init_state(cfg, 1, 8)
-        jaxpr = jax.make_jaxpr(
-            lambda p, t, s: forward(cfg, p, t, state=s, trunk=trunk,
-                                    trunk_isa="membw"))(
-            params, jnp.zeros((1, 1), jnp.int32), state)
-        return str(jaxpr).count("io_callback")
+        step = trace_bridged_step(cfg, params, trunk, isa="membw")
+        want = expected_bridge_callbacks(trunk)
+        # JA003 (count matches per-layer contract) + JA004 (all ordered)
+        assert audit_step(step, expected=want) == []
+        return count_callbacks(step.jaxpr).get("io_callback", 0)
 
     fused, plain = n_callbacks(True), n_callbacks(False)
     n_attn = sum(1 for mixer, _ in cfg.layer_plan() if mixer == "attn")
