@@ -20,12 +20,12 @@ def main() -> None:
 
     from . import bench_gemm_parallel, bench_gemv_bandwidth, bench_e2e
     from . import bench_ratio_trace, bench_kernels, bench_serving
-    from . import bench_fleet
+    from . import bench_fleet, bench_elastic
 
     rows = []
     for mod in (bench_gemm_parallel, bench_gemv_bandwidth, bench_e2e,
                 bench_ratio_trace, bench_kernels, bench_serving,
-                bench_fleet):
+                bench_fleet, bench_elastic):
         rows += mod.run()
 
     print("name,us_per_call,derived")
@@ -64,6 +64,8 @@ def main() -> None:
          grab("fleet_margin", "learned_vs_rr_pct")),
         ("fleet learned vs best static goodput", ">0%",
          grab("fleet_margin", "learned_vs_best_static_pct")),
+        ("elastic recovery margin (dynamic vs static)", ">0s",
+         grab("elastic_margin", "margin_s")),
     ]
     for label, paper, ours in checks:
         print(f"# {label}: paper={paper} ours={ours}")

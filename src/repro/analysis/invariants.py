@@ -11,8 +11,11 @@ hot paths:
   the EMA must satisfy the table's ``normalize`` convention (mean 1 over the
   valid workers for ``"mean"``, sum 1 for ``"sum"``).
 * **IV003 — offset boundaries.** ``OffsetSnapshot`` boundaries are monotone
-  non-decreasing int32 cumsums starting at 0 and ending at exactly ``N`` —
-  the device-side guarantee that compiled shards tile ``[0, N)``.
+  *non-decreasing* (not strictly increasing) int32 cumsums starting at 0 and
+  ending at exactly ``N`` — the device-side guarantee that compiled shards
+  tile ``[0, N)``.  Equal adjacent boundaries are legal and meaningful:
+  ``b[w] == b[w + 1]`` is worker ``w``'s zero-width shard, the fixed-shape
+  encoding of a parked core under an elastic-capacity mask.
 * **IV004 — plan partition.** Every shard plan's counts are non-negative and
   sum to exactly ``N``: contiguous shards partition the N-dim with no gap
   and no overlap.
@@ -163,7 +166,9 @@ def check_observation(observed, valid, normalize: str, *,
 
 def check_offset_boundaries(bounds, total: int, *,
                             where: str = "OffsetSnapshot.refresh") -> None:
-    """IV003: boundaries are a monotone int32 cumsum covering [0, total)."""
+    """IV003: boundaries are a monotone non-decreasing int32 cumsum covering
+    [0, total).  Equal adjacent entries (zero-width shards — parked cores)
+    are legal; only a *decrease* violates the tiling."""
     bounds = np.asarray(bounds)
     if bounds.dtype != np.int32:
         _fail("IV003", f"{where}: boundaries dtype {bounds.dtype}, want int32")
@@ -176,7 +181,8 @@ def check_offset_boundaries(bounds, total: int, *,
         _fail("IV003", f"{where}: boundaries end at {int(bounds[-1])}, "
                        f"want N={int(total)}")
     if np.any(np.diff(bounds) < 0):
-        _fail("IV003", f"{where}: boundaries not monotone: {bounds.tolist()}")
+        _fail("IV003", f"{where}: boundaries decrease (zero-width shards "
+                       f"are legal, negative ones are not): {bounds.tolist()}")
 
 
 def check_plan_partition(counts, total: int, *, where: str = "Balancer.plan") -> None:

@@ -17,7 +17,13 @@ from .ratio import (
     makespan,
 )
 from .pool import SubTask, ThreadWorkerPool, VirtualWorkerPool
-from .hybrid_sim import CoreSpec, SimulatedHybridCPU, make_machine, MACHINES
+from .hybrid_sim import (
+    CapacityEvent,
+    CoreSpec,
+    SimulatedHybridCPU,
+    make_machine,
+    MACHINES,
+)
 from .tuner import KernelTuner, TunerStore, shape_class
 from .pipeline import (
     PipelinePlan,
@@ -60,6 +66,7 @@ __all__ = [
     "SubTask",
     "ThreadWorkerPool",
     "VirtualWorkerPool",
+    "CapacityEvent",
     "CoreSpec",
     "SimulatedHybridCPU",
     "make_machine",

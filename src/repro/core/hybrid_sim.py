@@ -28,7 +28,8 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-__all__ = ["CoreSpec", "SimulatedHybridCPU", "make_machine", "MACHINES"]
+__all__ = ["CoreSpec", "CapacityEvent", "SimulatedHybridCPU", "make_machine",
+           "MACHINES"]
 
 
 @dataclass(frozen=True)
@@ -41,12 +42,49 @@ class CoreSpec:
     jitter: float = 0.02  # lognormal sigma of per-task noise
 
 
+@dataclass(frozen=True)
+class CapacityEvent:
+    """A scheduled capacity change on one core's virtual timeline.
+
+    ``kind="park"``: the OS parks the core for ``[t_start, t_end)`` — work
+    still *assigned* there crawls at the machine's ``park_slowdown`` (its
+    thread is time-sliced onto a sibling), and :meth:`SimulatedHybridCPU.
+    active_mask` reports the core inactive so planners stop assigning to
+    it.  ``kind="scale"``: DVFS/thermal frequency scaling — throughput is
+    divided by ``factor`` for the window but the core stays *active*
+    (planners keep using it; the ratio loop re-learns its share).
+
+    Unlike the ``background`` throttle list (which models *interference*
+    the planner must learn around), capacity events are *observable*: the
+    dispatcher may read ``active_mask`` the way a runtime reads
+    ``sched_getaffinity``.
+    """
+
+    t_start: float
+    t_end: float
+    core: int
+    kind: str = "park"  # "park" | "scale"
+    factor: float = 1.0  # for "scale": throughput divisor (> 1 slows)
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("park", "scale"):
+            raise ValueError(f"unknown capacity event kind {self.kind!r}")
+        if self.kind == "scale" and self.factor <= 0:
+            raise ValueError("scale factor must be positive")
+
+
 @dataclass
 class SimulatedHybridCPU:
     cores: List[CoreSpec]
     seed: int = 0
     # background load: (t_start, t_end, core_index, slowdown_factor>1)
     background: List[Tuple[float, float, int, float]] = field(default_factory=list)
+    # scheduled capacity changes (core parking / DVFS) — see CapacityEvent
+    capacity: List[CapacityEvent] = field(default_factory=list)
+    # effective slowdown of work left on a parked core: its thread is
+    # time-sliced onto a sibling, so it crawls rather than stalls forever
+    # (static planners that ignore active_mask still terminate)
+    park_slowdown: float = 32.0
 
     def __post_init__(self) -> None:
         self._rng = np.random.default_rng(self.seed)
@@ -58,6 +96,51 @@ class SimulatedHybridCPU:
     def true_throughput(self, isa: str) -> np.ndarray:
         return np.array([c.throughput[isa] for c in self.cores])
 
+    # -------------------------------------------------- capacity schedule --
+    def park(self, core: int, t_start: float = 0.0,
+             t_end: float = float("inf")) -> None:
+        """Park ``core`` for ``[t_start, t_end)`` (default: from now on,
+        forever — the drift-test idiom that is valid on every pool timeline
+        regardless of clock skew)."""
+        self.capacity.append(CapacityEvent(t_start, t_end, core, "park"))
+
+    def unpark(self, core: int) -> None:
+        """Drop every park event for ``core`` (scale events stay)."""
+        self.capacity = [ev for ev in self.capacity
+                         if not (ev.kind == "park" and ev.core == core)]
+
+    def set_freq_scale(self, core: int, factor: float, t_start: float = 0.0,
+                       t_end: float = float("inf")) -> None:
+        """DVFS: divide ``core``'s throughput by ``factor`` over the window.
+        The core stays active — planners keep it and re-learn its ratio."""
+        self.capacity.append(CapacityEvent(t_start, t_end, core, "scale",
+                                           factor))
+
+    def clear_capacity(self, core: "int | None" = None) -> None:
+        """Drop all capacity events (or just ``core``'s)."""
+        if core is None:
+            self.capacity = []
+        else:
+            self.capacity = [ev for ev in self.capacity if ev.core != core]
+
+    def active_mask(self, now: float = 0.0) -> np.ndarray:
+        """Boolean per-core mask: True where the core is *not* parked at
+        ``now``.  This is the observable signal dispatchers probe at plan
+        time; scale events do not deactivate a core."""
+        mask = np.ones(self.n_cores, dtype=bool)
+        for ev in self.capacity:
+            if ev.kind == "park" and ev.t_start <= now < ev.t_end:
+                mask[ev.core] = False
+        return mask
+
+    def capacity_slowdown(self, core: int, now: float) -> float:
+        """Multiplicative slowdown from capacity events covering ``now``."""
+        s = 1.0
+        for ev in self.capacity:
+            if ev.core == core and ev.t_start <= now < ev.t_end:
+                s *= self.park_slowdown if ev.kind == "park" else ev.factor
+        return s
+
     def background_slowdown(self, core: int, now: float) -> float:
         s = 1.0
         for t0, t1, idx, factor in self.background:
@@ -65,26 +148,36 @@ class SimulatedHybridCPU:
                 s *= factor
         return s
 
+    def _slowdown(self, core: int, now: float) -> float:
+        s = self.background_slowdown(core, now)
+        if self.capacity:
+            s *= self.capacity_slowdown(core, now)
+        return s
+
     def task_wall_time(self, core: int, start: float, base_seconds: float) -> float:
         """Wall seconds to complete ``base_seconds`` of unthrottled execution
         starting at virtual time ``start``, integrating the (piecewise-
-        constant) background slowdown over the task's own interval rather
-        than sampling it once at ``start`` — a throttle interval that begins
-        or ends mid-task is applied exactly for the portion it overlaps.
+        constant) slowdown — background throttles *and* capacity events —
+        over the task's own interval rather than sampling it once at
+        ``start``: an interval that begins or ends mid-task is applied
+        exactly for the portion it overlaps.
         """
         if base_seconds <= 0:
             return 0.0
-        boundaries = sorted({t for t0, t1, idx, _ in self.background
-                             if idx == core for t in (t0, t1) if t > start})
+        boundaries = sorted(
+            {t for t0, t1, idx, _ in self.background
+             if idx == core for t in (t0, t1) if t > start}
+            | {t for ev in self.capacity if ev.core == core
+               for t in (ev.t_start, ev.t_end) if t > start})
         t, remaining = start, base_seconds
         for b in boundaries:
-            s = self.background_slowdown(core, t)
+            s = self._slowdown(core, t)
             capacity = (b - t) / s  # base-seconds executable before b
             if remaining <= capacity:
                 return (t + remaining * s) - start
             remaining -= capacity
             t = b
-        return (t + remaining * self.background_slowdown(core, t)) - start
+        return (t + remaining * self._slowdown(core, t)) - start
 
     def task_time(self, worker: int, isa: str, work: float, now: float) -> float:
         if work <= 0:

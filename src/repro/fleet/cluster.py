@@ -126,8 +126,11 @@ class Node:
         """Aggregate streaming bandwidth on paper — what a static
         capacity-share partition weights by.  Deliberately blind to
         ``throttle``: nominal numbers don't know about background load
-        (that asymmetry is the fleet study's point)."""
-        return self.topology.aggregate_bandwidth
+        (that asymmetry is the fleet study's point).  Capacity events are
+        different: core parking is *observable* (the OS publishes it), so
+        parked cores' bandwidth is subtracted — this is the number
+        :meth:`replan_capacity` re-plans when an event fires mid-serve."""
+        return self.topology.active_bandwidth(self.now)
 
     # ------------------------------------------------------------ serving --
     def submit(self, request: Request) -> tuple:
@@ -160,6 +163,45 @@ class Node:
 
     def recover(self) -> None:
         self.active = True
+
+    # ----------------------------------------------------------- capacity --
+    def replan_capacity(self, now: Optional[float] = None) -> None:
+        """Re-plan the node after a capacity event: sample each socket's
+        active mask and adjust what the serving stack asks of it.
+
+        * **Partially parked socket** — shrink that engine's soft
+          ``slot_budget`` proportionally (floored at 1): fewer concurrent
+          requests are admitted while the remaining cores absorb the
+          in-flight ones.  No state is evicted, nothing retraces.
+        * **Fully parked socket** — deactivate its replica in the
+          dispatcher (``set_active``): *admitted* work freezes in place
+          and resumes on unpark (deliberately unlike :meth:`fail`, which
+          aborts — parked state survives), while still-waiting requests
+          are stolen back and resubmitted through routing so live sockets
+          pick them up.  If every socket is parked they wait in the
+          dispatcher's ``pending`` queue.
+        * **Returned socket** — restore the budget and reactivate (which
+          also flushes any pending queue).
+
+        ``now`` defaults to the node clock; capacity events applied with
+        the from-now-on ``[0, inf)`` idiom are visible on every timeline
+        regardless of clock skew.
+        """
+        t = self.now if now is None else now
+        for s, (machine, engine) in enumerate(
+                zip(self.topology.machines, self.engines)):
+            mask = machine.active_mask(t)
+            if not mask.any():
+                if self.dispatcher.active[s]:
+                    requeued = engine.steal_waiting()
+                    self.dispatcher.set_active(s, False)
+                    for r in requeued:
+                        self.dispatcher.submit(r)
+                continue
+            frac = float(mask.mean())
+            engine.set_slot_budget(int(round(engine.max_slots * frac)))
+            if not self.dispatcher.active[s]:
+                self.dispatcher.set_active(s, True)
 
 
 class Cluster:

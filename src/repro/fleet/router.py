@@ -115,6 +115,10 @@ class FleetRouter:
         self._rr = 0
         self.finished: List[Request] = []
         self.n_requeued = 0
+        # requests that arrived while *every* node was failed — held at
+        # the router (not crashed on) and flushed on the first recovery
+        self._parked: List[Request] = []
+        self.n_parked = 0
 
     # ------------------------------------------------------------- probes --
     @property
@@ -177,11 +181,20 @@ class FleetRouter:
 
     def submit(self, request: Request) -> Optional[int]:
         """Admission-check (when configured) then route and enqueue.
-        Returns the node index, or None when the request was shed."""
+        Returns the node index, or None when the request was shed — or
+        deferred: a request arriving during a fleet-wide failure window
+        (every node down) parks at the router and is resubmitted through
+        the full admission + routing path by the first recovery event,
+        instead of aborting the run (``route`` keeps its raise for direct
+        callers)."""
         if self.admission is not None:
             if not self.admission.consider(request, self):
                 self.finished.append(request)
                 return None
+        if not any(node.active for node in self.cluster.nodes):
+            self._parked.append(request)
+            self.n_parked += 1
+            return None
         i = self.route(request)
         self.cluster.nodes[i].submit(request)
         self.routed[i] += 1
@@ -263,6 +276,13 @@ class FleetRouter:
                 self.submit(r)
         else:
             node.recover()
+            if self._parked:
+                # first node back: flush requests parked during the
+                # fleet-wide outage, in arrival order, through the full
+                # admission + routing path
+                parked, self._parked = self._parked, []
+                for r in parked:
+                    self.submit(r)
 
     def run(self, requests: Sequence[Request],
             events: Sequence[NodeEvent] = ()) -> List[Request]:

@@ -232,6 +232,10 @@ class HybridKernelDispatcher:
         self._pool_factory = pool_factory
         self._pools: Dict[str, object] = {}
         self._balancers: Dict[tuple, Balancer] = {}
+        # worker liveness the owner can flip directly (the replica-level
+        # set_active idiom one level down); combined with the machine's
+        # scheduled capacity events at plan time — see capacity_mask()
+        self.active = np.ones(n_workers, dtype=bool)
         self._bytes: Dict[str, float] = {}
         self._busy: Dict[str, float] = {}
         # bytes/busy accounting is a read-modify-write on plain dicts;
@@ -274,13 +278,39 @@ class HybridKernelDispatcher:
             self._pools[isa] = self._pool_factory(isa)
         return self._pools[isa]
 
+    def set_active(self, i: int, active: bool = True) -> None:
+        """Mark worker ``i`` parked (or returned).  Plans stop assigning
+        to it; its ratio-table entry is untouched (zero-count workers are
+        carried over by the ``units > 0`` rule), so it resumes at its last
+        learned speed."""
+        if not 0 <= i < self.n_workers:
+            raise IndexError(f"worker {i} out of range")
+        self.active[i] = bool(active)
+
+    def capacity_mask(self, isa: str = GEMV_ISA) -> np.ndarray:
+        """The plan-time active mask: explicit :meth:`set_active` state
+        AND the machine's scheduled capacity events sampled at the ISA
+        pool's clock (the time the next region will actually start) — so
+        both eager dispatch and the compiled planner see fresh masks
+        without extra wiring."""
+        mask = self.active.copy()
+        if self.machine is not None:
+            pool = self._pools.get(isa)
+            now = float(getattr(pool, "clock", 0.0)) if pool is not None else 0.0
+            mask &= self.machine.active_mask(now)
+        return mask
+
     def _balancer(self, spec: KernelSpec) -> Balancer:
         key = (spec.table_key, spec.granularity)
         if key not in self._balancers:
             if self.dynamic:
-                policy = ProportionalPolicy(self.table, key=spec.table_key,
-                                            granularity=spec.granularity)
+                policy = ProportionalPolicy(
+                    self.table, key=spec.table_key,
+                    granularity=spec.granularity,
+                    active=lambda isa=spec.isa: self.capacity_mask(isa))
             else:
+                # the static baseline stays capacity-blind on purpose:
+                # that contrast is what bench_elastic measures
                 policy = EvenPolicy(self.n_workers,
                                     granularity=spec.granularity)
             self._balancers[key] = Balancer(policy, sink=self.sink,

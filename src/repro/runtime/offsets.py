@@ -96,9 +96,18 @@ class OffsetSnapshot:
     # ------------------------------------------------------------- refresh --
     def refresh(self) -> Dict[str, object]:
         """Re-plan every registered spec from current ratio state; returns
-        the new device snapshot ``{name: (n_workers + 1,) int32}``."""
+        the new device snapshot ``{name: (n_workers + 1,) int32}``.
+
+        The commit is atomic: both the host mirror and the device snapshot
+        are staged in locals and published together only after *every* spec
+        has planned successfully.  A planner exception mid-refresh must not
+        leave the host mirror ahead of the device snapshot — feedback
+        replay would then compare device-recovered shard sizes against
+        boundaries the device never saw.
+        """
         import jax.numpy as jnp
 
+        host: Dict[str, np.ndarray] = {}
         device: Dict[str, object] = {}
         for name, spec in self._specs.items():
             counts = np.asarray(self._plan_counts(spec), dtype=np.int64)
@@ -112,8 +121,9 @@ class OffsetSnapshot:
                 _contracts.check_offset_boundaries(
                     bounds, spec.total,
                     where=f"OffsetSnapshot.refresh[{name}]")
-            self._host[name] = bounds
+            host[name] = bounds
             device[name] = jnp.asarray(bounds)
+        self._host = host
         self._device = device
         return device
 

@@ -87,6 +87,16 @@ class ProportionalPolicy:
     ``"times"`` assumes this round's work was proportional to the current
     table; ``"units"`` reports the realized per-worker counts so the update
     holds even when the plan was clamped or floored.
+
+    ``active`` is an optional zero-argument probe returning a boolean
+    per-worker mask (e.g. ``machine.active_mask`` at the pool clock).
+    Masked-out workers get zero counts — and, because the table's
+    ``units > 0`` rule already treats zero-count workers as unmeasured,
+    their learned ratio is carried over unchanged through EMA feedback:
+    a parked core resumes at its last known speed when it returns.  The
+    plan keeps full width (fixed shapes downstream: no retrace, the
+    compiled path just emits zero-width shard slices).  An all-False mask
+    degenerates to all-active (the caller has nothing else to run on).
     """
 
     table: RatioTable
@@ -94,6 +104,7 @@ class ProportionalPolicy:
     granularity: int = 1
     min_per_worker: int = 0
     feedback: str = "times"
+    active: "Callable[[], np.ndarray] | None" = None
 
     def __post_init__(self) -> None:
         if self.feedback not in ("times", "units"):
@@ -103,16 +114,43 @@ class ProportionalPolicy:
     def n_workers(self) -> int:
         return self.table.n_workers
 
+    def _mask(self) -> "np.ndarray | None":
+        if self.active is None:
+            return None
+        mask = np.asarray(self.active(), dtype=bool)
+        if mask.shape != (self.table.n_workers,):
+            raise ValueError(
+                f"active mask shape {mask.shape} != ({self.table.n_workers},)")
+        if not mask.any():
+            return None  # nothing else to run on: plan over everyone
+        return mask
+
     def plan(self, total: int) -> Plan:
         n = self.table.n_workers
-        floor = self.min_per_worker * n
+        mask = self._mask()
+        if mask is None or mask.all():
+            floor = self.min_per_worker * n
+            if total < floor:
+                raise ValueError(
+                    f"need >= {floor} units for {n} workers "
+                    f"(min_per_worker={self.min_per_worker})")
+            counts = np.full(n, self.min_per_worker, dtype=np.int64)
+            counts += proportional_partition(total - floor,
+                                             self.table.ratios(self.key),
+                                             self.granularity)
+            return Plan(counts=counts, key=self.key,
+                        granularity=self.granularity)
+        # masked plan: floor only active workers, zero ratio elsewhere
+        # (proportional_partition assigns nothing to zero-ratio workers)
+        n_active = int(mask.sum())
+        floor = self.min_per_worker * n_active
         if total < floor:
             raise ValueError(
-                f"need >= {floor} units for {n} workers "
+                f"need >= {floor} units for {n_active} active workers "
                 f"(min_per_worker={self.min_per_worker})")
-        counts = np.full(n, self.min_per_worker, dtype=np.int64)
-        counts += proportional_partition(total - floor,
-                                         self.table.ratios(self.key),
+        counts = np.where(mask, self.min_per_worker, 0).astype(np.int64)
+        ratios = np.where(mask, self.table.ratios(self.key), 0.0)
+        counts += proportional_partition(total - floor, ratios,
                                          self.granularity)
         return Plan(counts=counts, key=self.key, granularity=self.granularity)
 
@@ -148,11 +186,13 @@ class RecursivePolicy:
     granularity: int = 1
     min_per_worker: int = 0
     feedback: str = "units"
+    active: "Callable[[], np.ndarray] | None" = None
 
     def __post_init__(self) -> None:
         self._inner = ProportionalPolicy(
             self.table, key=self.key, granularity=self.granularity,
-            min_per_worker=self.min_per_worker, feedback=self.feedback)
+            min_per_worker=self.min_per_worker, feedback=self.feedback,
+            active=self.active)
         if self.children and len(self.children) != self.table.n_workers:
             raise ValueError(
                 f"{len(self.children)} children for "

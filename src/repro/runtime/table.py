@@ -209,7 +209,7 @@ class RatioStore:
         with open(self.path) as f:
             return RatioTable.from_json(f.read(), **overrides)
 
-    def load_into(self, table: RatioTable) -> bool:
+    def load_into(self, table: RatioTable, active=None) -> bool:
         """Warm-start an existing table from the store.  Returns False (and
         leaves ``table`` untouched) when nothing compatible is stored.
 
@@ -220,6 +220,26 @@ class RatioStore:
         filter the stored history was produced under — both are refused
         rather than blended.
 
+        ``active`` (a boolean mask over ``table``'s full worker width)
+        reconciles the *same machine* saved under a different capacity
+        state — e.g. a table saved while some cores were parked, or loaded
+        while some now are:
+
+        * *expand* — ``active`` has ``table.n_workers`` entries and the
+          store's width equals its True count: the store was saved by an
+          active-width table; stored values land in the active positions,
+          inactive workers keep their current (init or learned) ratios.
+        * *compress* — ``active`` has ``stored.n_workers`` entries and the
+          table's width equals its True count: the store is full-width but
+          the live table only spans the active cores; the stored vector is
+          projected down via ``stored[mask]``.
+
+        Any other width combination is a genuinely different machine and
+        is refused, exactly as before.  (The preferred design keeps tables
+        full-width and masks planning instead — see
+        ``ProportionalPolicy.active`` — so parked cores keep their stored
+        ratios without any projection at all.)
+
         A torn or corrupt file (a crashed writer predating the atomic
         rename, or a truncated copy) is treated as "nothing stored":
         warm-start is an optimization, so a cold start beats crashing the
@@ -228,10 +248,28 @@ class RatioStore:
             stored = self.load()
         except (json.JSONDecodeError, KeyError, TypeError, ValueError):
             return False
-        if (stored is None or stored.n_workers != table.n_workers
-                or stored.normalize != table.normalize
+        if (stored is None or stored.normalize != table.normalize
                 or stored.alpha != table.alpha):
             return False
-        for key in stored.keys():
-            table.set(key, stored.ratios(key))
-        return True
+        if stored.n_workers == table.n_workers:
+            for key in stored.keys():
+                table.set(key, stored.ratios(key))
+            return True
+        if active is None:
+            return False
+        mask = np.asarray(active, dtype=bool)
+        if (mask.shape == (table.n_workers,)
+                and stored.n_workers == int(mask.sum())):
+            # expand: active-width store -> full-width table
+            for key in stored.keys():
+                values = table.ratios(key).copy()
+                values[mask] = stored.ratios(key)
+                table.set(key, values)
+            return True
+        if (mask.shape == (stored.n_workers,)
+                and table.n_workers == int(mask.sum())):
+            # compress: full-width store -> active-width table
+            for key in stored.keys():
+                table.set(key, stored.ratios(key)[mask])
+            return True
+        return False  # not a masked view of this machine: refuse

@@ -60,6 +60,9 @@ class InflightDispatcher:
         # replica liveness: deactivated replicas are skipped by routing and
         # stepping and masked out of EMA feedback (see set_active)
         self.active = np.ones(n, dtype=bool)
+        # requests that arrived while *every* replica was inactive; held
+        # here and flushed the moment one reactivates (see submit)
+        self.pending: List[Request] = []
         # latest emitted per-phase RegionStats — the child-telemetry probe
         # a recursive parent balancer snapshots (RegionStats.children)
         self.last_stats: Dict[str, RegionStats] = {}
@@ -86,6 +89,12 @@ class InflightDispatcher:
             for acc_u, acc_t in self._acc.values():
                 acc_u[i] = 0
                 acc_t[i] = 0.0
+        elif self.pending:
+            # first replica back: flush requests deferred while every
+            # replica was down (arrival order preserved)
+            pending, self.pending = self.pending, []
+            for r in pending:
+                self.submit(r)
 
     # ------------------------------------------------------------ routing --
     def route(self, request: Request) -> int:
@@ -123,7 +132,17 @@ class InflightDispatcher:
         return int(np.argmin(scores))  # ties -> lowest replica id
 
     def submit(self, request: Request) -> tuple:
-        """Route and enqueue; returns (replica index, request id)."""
+        """Route and enqueue; returns (replica index, request id).
+
+        A request arriving while *every* replica is inactive (a node-wide
+        failure or capacity window) is deferred, not crashed on: it waits
+        in :attr:`pending` and is resubmitted by the first
+        :meth:`set_active` reactivation.  Returns ``(-1, None)`` for a
+        deferred request.  :meth:`route` keeps its raise — calling it
+        directly with no active replica is a programming error."""
+        if not self.active.any():
+            self.pending.append(request)
+            return -1, None
         i = self.route(request)
         rid = self.engines[i].submit(request)
         return i, rid
@@ -146,6 +165,9 @@ class InflightDispatcher:
     # ------------------------------------------------------------ driving --
     @property
     def has_work(self) -> bool:
+        # pending requests are deliberately excluded: they only exist while
+        # every replica is inactive, when stepping cannot make progress —
+        # the driver must apply the recovery event (set_active) to proceed
         return any(e.has_work
                    for i, e in enumerate(self.engines) if self.active[i])
 

@@ -228,6 +228,10 @@ class ContinuousBatchingEngine:
         self.manager = SlotCacheManager(cfg, max_slots, max_seq)
         self.scheduler = IterationScheduler(prefill_chunk,
                                             prefill_lanes=prefill_lanes)
+        # soft concurrency cap (<= max_slots): admission headroom only, so
+        # a capacity event can shrink the effective batch without touching
+        # allocated slot state or recompiling (shapes stay max_slots)
+        self.slot_budget = max_slots
         self.now = 0.0
         self.finished: List[Request] = []
         self._running: List[Request] = []
@@ -399,6 +403,16 @@ class ContinuousBatchingEngine:
         self.scheduler.submit(request)
         return request.request_id
 
+    def set_slot_budget(self, budget: int) -> int:
+        """Re-plan the soft concurrency cap (a capacity event fired):
+        admission stops above the budget while already-admitted requests
+        run to completion — no slot state is evicted and no shape changes,
+        so nothing retraces.  Clamped to ``[1, max_slots]`` (budget 0 with
+        waiting work would wedge ``run_until_idle``; full drain is the
+        dispatcher's ``set_active`` job).  Returns the applied budget."""
+        self.slot_budget = int(np.clip(budget, 1, self.max_slots))
+        return self.slot_budget
+
     @property
     def has_work(self) -> bool:
         return self.scheduler.has_work or bool(self._running)
@@ -494,7 +508,11 @@ class ContinuousBatchingEngine:
                 and sched.waiting and not sched.n_waiting(self.now)):
             self.now = max(self.now, sched.waiting[0].arrival_time)
 
-        chunks = sched.next_prefill(self.now, man.n_free)
+        # admission headroom: free slots, clamped by the soft slot budget
+        # (a capacity event may have shrunk the sustainable concurrency)
+        budget_free = max(0, min(man.n_free,
+                                 self.slot_budget - man.n_active))
+        chunks = sched.next_prefill(self.now, budget_free)
         if chunks and self.prefill_lanes == 1:
             chunk = chunks[0]
             req = chunk.request

@@ -31,6 +31,7 @@ from repro.core.pool import VirtualWorkerPool
 from repro.kernels import dispatch as _kernel
 from repro.runtime import (
     Balancer,
+    EvenPolicy,
     ProportionalPolicy,
     RatioTable,
     StatsSink,
@@ -65,13 +66,19 @@ def phase_kernel_key(phase: str, kind: Optional[str] = None) -> str:
     return _kernel.kernel_key(PHASE_ISA[phase], kind)
 
 
-def phase_balancers(table: RatioTable, sink: Optional[StatsSink] = None):
+def phase_balancers(table: RatioTable, sink: Optional[StatsSink] = None,
+                    active=None):
     """One units-feedback Balancer per phase over a shared table — the
     construction both levels of the control loop (core dispatch here,
-    replica dispatch in :mod:`repro.serving.dispatch`) run on."""
+    replica dispatch in :mod:`repro.serving.dispatch`) run on.
+
+    ``active`` is an optional zero-argument probe returning the current
+    boolean worker mask (see :class:`~repro.runtime.ProportionalPolicy`):
+    masked workers get zero-width shares and keep their learned ratios."""
     return {
         phase: Balancer(
-            ProportionalPolicy(table, key=phase, feedback="units"),
+            ProportionalPolicy(table, key=phase, feedback="units",
+                               active=active),
             sink=sink, keep_stats=False)
         for phase in PHASES
     }
@@ -106,7 +113,7 @@ class HybridPhaseCost:
                  prefill_macs_per_token: float = 14e9,
                  decode_bytes_per_step: float = 3.9e9,
                  kv_bytes_per_ctx_token: float = 1e6,
-                 decode_units: int = 4096):
+                 decode_units: int = 4096, dynamic: bool = True):
         if isinstance(machine, str):
             machine = make_machine(machine, seed=seed)
         if hasattr(machine, "flattened"):
@@ -123,9 +130,32 @@ class HybridPhaseCost:
         self.decode_bytes_per_step = decode_bytes_per_step
         self.kv_bytes_per_ctx_token = kv_bytes_per_ctx_token
         self.decode_units = decode_units
+        self.dynamic = dynamic
         self._pools = {phase: VirtualWorkerPool(machine, isa=PHASE_ISA[phase])
                        for phase in PHASES}
-        self._balancers = phase_balancers(self.table, sink)
+        if dynamic:
+            # per-phase capacity probe: sample the machine's active mask
+            # at *that phase's pool clock* (the instant its next region
+            # starts), so a park event mid-serve zeroes the parked cores'
+            # shares on the very next iteration with no extra wiring
+            self._balancers = {
+                phase: Balancer(
+                    ProportionalPolicy(
+                        self.table, key=phase, feedback="units",
+                        active=(lambda p=phase: machine.active_mask(
+                            self._pools[p].clock))),
+                    sink=sink, keep_stats=False)
+                for phase in PHASES
+            }
+        else:
+            # the static (OpenMP balanced parallel-for) clock: equal
+            # shares, no feedback, capacity-blind — bench_elastic's
+            # baseline arm
+            self._balancers = {
+                phase: Balancer(EvenPolicy(machine.n_cores),
+                                sink=sink, keep_stats=False)
+                for phase in PHASES
+            }
         # bytes-moved / busy-seconds accounting for the paper's achieved-
         # bandwidth fraction (decode is the bandwidth-bound phase).
         self._bytes = {phase: 0.0 for phase in PHASES}

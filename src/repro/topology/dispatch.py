@@ -179,13 +179,21 @@ class TopologyDispatcher:
         return 1.0 + (penalty - 1.0) * remote_frac
 
     # ------------------------------------------------------------ plumbing --
+    def socket_mask(self, isa: str = GEMV_ISA) -> np.ndarray:
+        """Per-socket active mask: a socket stays plannable while *any* of
+        its cores is active (the inner dispatcher masks the parked ones);
+        a fully-parked socket gets a zero-width outer range."""
+        return np.array([d.capacity_mask(isa).any()
+                         for d in self.socket_dispatchers], dtype=bool)
+
     def _balancer(self, spec: KernelSpec) -> Balancer:
         key = (spec.table_key, spec.granularity)
         if key not in self._balancers:
             if self.dynamic:
-                policy = ProportionalPolicy(self.table, key=spec.table_key,
-                                            granularity=spec.granularity,
-                                            feedback="units")
+                policy = ProportionalPolicy(
+                    self.table, key=spec.table_key,
+                    granularity=spec.granularity, feedback="units",
+                    active=lambda isa=spec.isa: self.socket_mask(isa))
             else:
                 policy = EvenPolicy(self.n_sockets,
                                     granularity=spec.granularity)

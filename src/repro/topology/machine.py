@@ -177,6 +177,45 @@ class MachineTopology:
         bw = np.array([s.bandwidth for s in self.sockets], dtype=np.float64)
         return bw / bw.sum()
 
+    # ---------------------------------------------------------- capacity ---
+    def park_core(self, core: int, t_start: float = 0.0,
+                  t_end: float = float("inf")) -> None:
+        """Park global core index ``core`` (routed to its socket machine)."""
+        s = self.socket_of(core)
+        local = core - self.domains()[s].core_start
+        self.machines[s].park(local, t_start, t_end)
+
+    def unpark_core(self, core: int) -> None:
+        s = self.socket_of(core)
+        local = core - self.domains()[s].core_start
+        self.machines[s].unpark(local)
+
+    def park_socket(self, socket: int, t_start: float = 0.0,
+                    t_end: float = float("inf")) -> None:
+        """Park every core of ``socket`` — a socket's worth of capacity
+        gone (thermal trip, foreground app pinned to one tile)."""
+        m = self.machines[socket]
+        for local in range(m.n_cores):
+            m.park(local, t_start, t_end)
+
+    def unpark_socket(self, socket: int) -> None:
+        m = self.machines[socket]
+        for local in range(m.n_cores):
+            m.unpark(local)
+
+    def active_mask(self, now: float = 0.0) -> np.ndarray:
+        """Global-core boolean mask: concatenation of per-socket masks."""
+        return np.concatenate([m.active_mask(now) for m in self.machines])
+
+    def active_bandwidth(self, now: float = 0.0) -> float:
+        """Aggregate streaming bandwidth of *active* cores only — what
+        ``Node.nominal_capacity`` re-plans to when a capacity event fires."""
+        total = 0.0
+        for m in self.machines:
+            mask = m.active_mask(now)
+            total += float(m.true_throughput(MEMBW)[mask].sum())
+        return total
+
     # ------------------------------------------------- oblivious baseline --
     @property
     def oblivious_blend(self) -> float:

@@ -255,3 +255,100 @@ def test_compiled_eager_apply_and_feedback_roundtrip():
             "sizes": np.zeros(disp.n_workers, np.int32)}]
     with pytest.raises(ValueError):
         cd.feedback(bad)
+
+
+# ------------------------------------------------- zero-width shards --
+@pytest.mark.parametrize("quant", ["q4", "int8", "fp32"])
+def test_zero_width_shards_all_projections_match_dense(quant):
+    """Elastic capacity through the compiled path: parking half the
+    dispatcher's workers re-plans every registered spec to zero-width
+    shard slices (``b[w] == b[w + 1]``) through fixed ``(n_workers + 1,)``
+    boundary arrays — no retrace — and every projection kind (and the
+    head) produces the dense split's output exactly: the boundaries only
+    feed the cost tape, the monolithic kernels never see them."""
+    cfg, params, disp, bridged, compiled = _trunks(quant)
+    dense = compiled.compiled_refresh()
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((2, cfg.d_model)).astype(np.float32))
+    xff = jnp.asarray(rng.standard_normal((2, cfg.d_ff)).astype(np.float32))
+
+    def outputs(offsets):
+        outs = {}
+        for group, name in PROJECTIONS:
+            proj = compiled.projector(0, 0, group, GEMV_ISA, offsets=offsets)
+            xin = xff if (group, name) == ("ffn", "wo") else x
+            outs[(group, name)] = np.asarray(proj(name, xin, None))
+        outs["head"] = np.asarray(
+            compiled.apply_head(x, isa=GEMV_ISA, offsets=offsets))
+        return outs
+
+    ref = outputs(dense)
+    n = disp.n_workers
+    for c in range(n // 2, n):
+        disp.set_active(c, False)
+    masked = compiled.compiled_refresh()
+    snap = compiled._compiled().snapshot
+    for name in snap.names:
+        b = snap.boundaries(name)
+        assert b.shape == (n + 1,)                   # fixed width: no retrace
+        assert (np.diff(b) >= 0).all()               # monotone non-decreasing
+        counts = snap.counts(name)
+        assert (counts[n // 2:] == 0).all()          # parked => zero-width
+        assert counts.sum() == snap.spec(name).total
+        # IV003 accepts equal adjacent boundaries (zero-width is legal)
+        from repro.analysis import invariants
+        with invariants.contracts():
+            invariants.check_offset_boundaries(b, snap.spec(name).total)
+    got = outputs(masked)
+    for key, a in ref.items():
+        np.testing.assert_array_equal(a, got[key])   # bit-identical, all quants
+
+
+def test_compiled_engine_tokens_identical_across_park_events():
+    """Engine-level elasticity: a park window landing mid-serve (on both
+    the kernel dispatcher's machine and the phase-cost clock) changes the
+    virtual timing but not one generated token, and the compiled step
+    still audits to zero host callbacks after masked re-planning."""
+    from repro.analysis.jaxpr_audit import (
+        audit_step, count_callbacks, trace_compiled_step)
+    from repro.configs import reduced_config
+    from repro.models import BalancedTrunk, init_params
+    from repro.serving import (
+        ContinuousBatchingEngine,
+        HybridPhaseCost,
+        poisson_requests,
+    )
+
+    cfg = reduced_config("granite-8b")
+    params = init_params(cfg, jax.random.key(0))
+
+    def run(park: bool):
+        disp = HybridKernelDispatcher.virtual("ultra-125h", execute=True)
+        trunk = BalancedTrunk.from_params(cfg, params, disp, quant="q4",
+                                          mode="compiled")
+        cost = HybridPhaseCost("ultra-125h")
+        engine = ContinuousBatchingEngine(
+            cfg, params, max_slots=2, max_seq=16, prefill_chunk=4,
+            cost_model=cost, balanced_trunk=trunk)
+        requests = poisson_requests(3, rate=100.0,
+                                    vocab_size=cfg.vocab_size,
+                                    prompt_len=6, max_new_tokens=4, seed=0)
+        for r in requests:
+            engine.submit(r)
+        if park:
+            for _ in range(2):
+                engine.step()
+            n = disp.n_workers
+            for c in range(n // 2, n):   # a socket's worth, mid-serve
+                disp.machine.park(c)
+                cost.machine.park(c)
+        engine.run_until_idle()
+        return requests, trunk
+
+    base, _ = run(park=False)
+    parked, trunk = run(park=True)
+    for a, b in zip(base, parked):
+        assert a.generated == b.generated
+    step = trace_compiled_step(cfg, params, trunk, isa=GEMV_ISA)
+    assert audit_step(step) == []
+    assert count_callbacks(step.jaxpr) == {}

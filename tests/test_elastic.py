@@ -1,0 +1,467 @@
+"""Elastic capacity (ISSUE 9): cores and sockets that come and go
+mid-serve, and the re-plan path through every layer.
+
+* the machine model's :class:`~repro.core.CapacityEvent` schedule — park
+  and frequency-scale windows on the virtual clock, integrated exactly by
+  ``task_wall_time``, observable via ``active_mask`` (unlike the
+  ``background`` throttle list, which planners must *learn* around);
+* masked planning: :class:`~repro.runtime.ProportionalPolicy.active`
+  probes zero out parked workers while the full-width
+  :class:`~repro.runtime.RatioTable` carries their learned ratios;
+* dispatcher masks at both levels (core
+  :class:`~repro.kernels.dispatch.HybridKernelDispatcher`, socket
+  :class:`~repro.topology.TopologyDispatcher`) and the per-phase probes
+  inside :class:`~repro.serving.HybridPhaseCost`;
+* the engine's soft ``slot_budget`` and
+  :meth:`repro.fleet.Node.replan_capacity` (partial park -> smaller
+  budget, full park -> frozen replica + requeued waiting work);
+* the satellite bugfixes: :meth:`OffsetSnapshot.refresh` atomic commit,
+  :meth:`InflightDispatcher.submit` deferring instead of crashing when
+  every replica is inactive, and :meth:`RatioStore.load_into` masked
+  projection onto the same machine's full-width table.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import CapacityEvent, make_machine
+from repro.fleet import Node, NodeSpec
+from repro.kernels.dispatch import (
+    GEMV_ISA,
+    HybridKernelDispatcher,
+    KernelSpec,
+)
+from repro.models import init_params
+from repro.models.transformer import ModelConfig
+from repro.runtime import (
+    Balancer,
+    OffsetSnapshot,
+    OffsetSpec,
+    ProportionalPolicy,
+    RatioStore,
+    RatioTable,
+)
+from repro.serving import (
+    ContinuousBatchingEngine,
+    HybridPhaseCost,
+    InflightDispatcher,
+    LinearPhaseCost,
+    Request,
+)
+from repro.topology import TopologyDispatcher, make_topology
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab_size=128, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, jax.random.key(0))
+
+
+def _requests(n, *, arrival=0.0, prompt=6, new=4):
+    return [Request(prompt=np.arange(1, prompt + 1) % CFG.vocab_size,
+                    max_new_tokens=new,
+                    arrival_time=arrival + 1e-3 * i) for i in range(n)]
+
+
+# ------------------------------------------------------ capacity events --
+class TestCapacityEvents:
+    def test_event_validation(self):
+        with pytest.raises(ValueError):
+            CapacityEvent(0.0, 1.0, 0, kind="nap")
+        with pytest.raises(ValueError):
+            CapacityEvent(0.0, 1.0, 0, kind="scale", factor=0.0)
+
+    def test_active_mask_window(self):
+        m = make_machine("ultra-125h")
+        m.park(2, 1.0, 2.0)
+        assert m.active_mask(0.5).all()
+        assert not m.active_mask(1.0)[2]
+        assert not m.active_mask(1.5)[2]
+        assert m.active_mask(2.0).all()          # [t_start, t_end)
+
+    def test_scale_does_not_deactivate(self):
+        m = make_machine("ultra-125h")
+        m.set_freq_scale(0, 2.0, 0.0, 10.0)
+        assert m.active_mask(5.0).all()
+        assert m.capacity_slowdown(0, 5.0) == pytest.approx(2.0)
+
+    def test_unpark_keeps_scale_events(self):
+        m = make_machine("ultra-125h")
+        m.park(0)
+        m.set_freq_scale(0, 3.0, 0.0, 10.0)
+        m.unpark(0)
+        assert m.active_mask(1.0)[0]
+        assert m.capacity_slowdown(0, 1.0) == pytest.approx(3.0)
+        m.clear_capacity()
+        assert m.capacity_slowdown(0, 1.0) == pytest.approx(1.0)
+
+    def test_task_wall_time_integrates_park_window(self):
+        m = make_machine("homogeneous-8")
+        m.park(0, t_start=1.0)                   # parks forever at t=1
+        # 2.0 base-seconds from t=0: 1.0 runs clean, the remaining 1.0
+        # crawls at park_slowdown on the time-sliced sibling
+        wall = m.task_wall_time(0, 0.0, 2.0)
+        assert wall == pytest.approx(1.0 + 1.0 * m.park_slowdown)
+
+    def test_task_wall_time_scale_window_mid_task(self):
+        m = make_machine("homogeneous-8")
+        m.set_freq_scale(0, 2.0, 1.0, 2.0)
+        # 1s clean + the [1,2) window executes 0.5 base + 0.5 clean after
+        assert m.task_wall_time(0, 0.0, 2.0) == pytest.approx(2.5)
+
+    def test_infinite_park_still_terminates(self):
+        m = make_machine("homogeneous-8")
+        m.park(3)                                # [0, inf)
+        wall = m.task_wall_time(3, 0.0, 1.0)
+        assert np.isfinite(wall)
+        assert wall == pytest.approx(m.park_slowdown)
+
+    def test_background_and_capacity_compose(self):
+        m = make_machine("homogeneous-8")
+        m.background.append((0.0, 10.0, 0, 2.0))
+        m.set_freq_scale(0, 3.0, 0.0, 10.0)
+        assert m._slowdown(0, 5.0) == pytest.approx(6.0)
+
+
+# ------------------------------------------------------- masked planning --
+class TestMaskedPolicy:
+    def test_masked_plan_zeroes_parked_workers(self):
+        table = RatioTable(4)
+        table.set("k", [2.0, 1.0, 1.0, 1.0])
+        mask = np.array([True, True, False, True])
+        pol = ProportionalPolicy(table, key="k", min_per_worker=1,
+                                 active=lambda: mask)
+        counts = pol.plan(32).counts
+        assert counts[2] == 0
+        assert counts.sum() == 32
+        assert (counts[[0, 1, 3]] >= 1).all()
+
+    def test_all_false_mask_degenerates_to_unmasked(self):
+        table = RatioTable(4)
+        pol = ProportionalPolicy(table, key="k", min_per_worker=1,
+                                 active=lambda: np.zeros(4, dtype=bool))
+        counts = pol.plan(8).counts
+        assert counts.sum() == 8
+        assert (counts >= 1).all()               # nothing else to run on
+
+    def test_masked_floor_validation(self):
+        table = RatioTable(4)
+        pol = ProportionalPolicy(table, key="k", min_per_worker=2,
+                                 active=lambda: np.array([1, 1, 0, 1], bool))
+        with pytest.raises(ValueError):
+            pol.plan(5)                          # floor is 2 * 3 active
+        assert pol.plan(6).counts.sum() == 6
+
+    def test_bad_mask_shape_raises(self):
+        table = RatioTable(4)
+        pol = ProportionalPolicy(table, key="k",
+                                 active=lambda: np.ones(3, dtype=bool))
+        with pytest.raises(ValueError):
+            pol.plan(8)
+
+    def test_parked_worker_keeps_learned_ratio_through_feedback(self):
+        table = RatioTable(4, alpha=0.5)
+        table.set("k", [2.0, 1.0, 0.5, 0.5])
+        parked_before = float(table.ratios("k")[2])
+        mask = np.array([True, True, False, True])
+        bal = Balancer(ProportionalPolicy(table, key="k", feedback="units",
+                                          active=lambda: mask))
+        for _ in range(4):
+            plan = bal.plan(64)
+            assert plan.counts[2] == 0
+            # equal shard times => the active workers' ratios even out,
+            # the parked worker's entry must ride along unchanged
+            bal.report(plan, np.where(plan.counts > 0, 0.1, 0.0))
+        after = table.ratios("k")
+        assert after[2] == pytest.approx(parked_before, rel=0.35)
+        assert after[2] > 0
+
+
+# ----------------------------------------------------- dispatcher masks --
+class TestDispatcherMasks:
+    SPEC = KernelSpec(name="q4_gemv", isa=GEMV_ISA, granularity=1,
+                      work_per_unit=4096.0)
+
+    def test_set_active_masks_plans(self):
+        d = HybridKernelDispatcher.virtual("ultra-125h")
+        d.set_active(3, False)
+        assert not d.capacity_mask()[3]
+        st = d.dispatch(self.SPEC, 64)
+        assert st.counts[3] == 0
+        assert st.counts.sum() == 64
+        d.set_active(3, True)
+        assert d.capacity_mask().all()
+        with pytest.raises(IndexError):
+            d.set_active(99, False)
+
+    def test_machine_park_visible_through_capacity_mask(self):
+        d = HybridKernelDispatcher.virtual("ultra-125h")
+        d.dispatch(self.SPEC, 32)                # creates the ISA pool
+        d.machine.park(1)                        # [0, inf): every timeline
+        assert not d.capacity_mask()[1]
+        st = d.dispatch(self.SPEC, 64)
+        assert st.counts[1] == 0
+        d.machine.unpark(1)
+        assert d.capacity_mask().all()
+
+    def test_socket_mask_and_masked_two_level_dispatch(self):
+        topo = make_topology("2s-12900k")
+        td = TopologyDispatcher(topo)
+        assert td.socket_mask().tolist() == [True, True]
+        for c in range(topo.machines[1].n_cores):
+            topo.machines[1].park(c)
+        assert td.socket_mask().tolist() == [True, False]
+        st = td.dispatch(self.SPEC, 256)
+        assert st.counts.sum() == 256
+        # second-level check: socket 1 executed nothing
+        s1 = td.socket_dispatchers[1]
+        assert s1.achieved_bandwidth(GEMV_ISA) == 0.0
+
+    def test_topology_park_socket_roundtrip(self):
+        topo = make_topology("2s-12900k")
+        full = topo.active_bandwidth(0.0)
+        topo.park_socket(1)
+        assert topo.active_mask(0.0).sum() == topo.machines[0].n_cores
+        assert topo.active_bandwidth(0.0) == pytest.approx(full / 2, rel=0.2)
+        topo.unpark_socket(1)
+        assert topo.active_mask(0.0).all()
+        assert topo.active_bandwidth(0.0) == pytest.approx(full)
+
+    def test_park_core_routes_global_index(self):
+        topo = make_topology("2s-12900k")
+        n0 = topo.machines[0].n_cores
+        topo.park_core(n0 + 2)                   # third core of socket 1
+        assert not topo.machines[1].active_mask(0.0)[2]
+        assert topo.machines[0].active_mask(0.0).all()
+        topo.unpark_core(n0 + 2)
+        assert topo.active_mask(0.0).all()
+
+
+# ------------------------------------------------- phase cost re-planning --
+class TestPhaseCostElastic:
+    def test_dynamic_masks_parked_cores_static_stalls(self):
+        dyn = HybridPhaseCost("ultra-125h", dynamic=True)
+        sta = HybridPhaseCost("ultra-125h", dynamic=False)
+        for cost in (dyn, sta):
+            cost.decode_seconds(1, 0)            # warm the ratio loop
+            n = cost.machine.n_cores
+            for c in range(n // 2, n):
+                cost.machine.park(c)
+        t_dyn = dyn.decode_seconds(1, 0)
+        t_sta = sta.decode_seconds(1, 0)
+        # static hands the parked cores equal shares and waits for the
+        # park_slowdown crawl; dynamic re-plans onto the active half
+        assert t_sta > 4 * t_dyn
+
+    def test_parked_ratio_survives_unpark(self):
+        cost = HybridPhaseCost("ultra-125h", dynamic=True)
+        for _ in range(3):
+            cost.decode_seconds(2, 4)
+        before = cost.ratios("decode").copy()
+        n = cost.machine.n_cores
+        for c in range(n // 2, n):
+            cost.machine.park(c)
+        for _ in range(3):
+            cost.decode_seconds(2, 4)
+        parked = cost.ratios("decode")[n // 2:]
+        assert (parked > 0).all()                # carried, not zeroed
+        for c in range(n // 2, n):
+            cost.machine.unpark(c)
+        cost.decode_seconds(2, 4)
+        assert cost.ratios("decode").shape == before.shape
+
+
+# --------------------------------------------------- engine slot budget --
+class TestSlotBudget:
+    def test_budget_clamps(self, params):
+        eng = ContinuousBatchingEngine(CFG, params, max_slots=4, max_seq=16,
+                                       cost_model=LinearPhaseCost())
+        assert eng.set_slot_budget(0) == 1       # 0 would wedge the queue
+        assert eng.set_slot_budget(99) == 4
+        assert eng.set_slot_budget(2) == 2
+
+    def test_budget_caps_admission_without_evicting(self, params):
+        eng = ContinuousBatchingEngine(CFG, params, max_slots=4, max_seq=16,
+                                       prefill_chunk=8,
+                                       cost_model=LinearPhaseCost())
+        for r in _requests(6):
+            eng.submit(r)
+        eng.set_slot_budget(2)
+        for _ in range(6):
+            eng.step()
+            assert eng.manager.n_active <= 2
+        eng.set_slot_budget(4)
+        eng.run_until_idle()
+        assert all(r.finish_time is not None for r in eng.finished)
+
+
+# ------------------------------------------------------ node re-planning --
+class TestNodeReplan:
+    def test_partial_park_shrinks_slot_budget(self, params):
+        node = Node(NodeSpec("n0", "2s-12900k", max_slots=4), CFG, params,
+                    max_seq=16)
+        node.topology.park_core(0)
+        node.topology.park_core(1)               # 2 of 16 on socket 0
+        node.replan_capacity()
+        assert node.engines[0].slot_budget == round(4 * 14 / 16)
+        assert node.engines[1].slot_budget == 4
+        assert node.dispatcher.active.all()
+
+    def test_full_socket_park_freezes_and_resumes(self, params):
+        node = Node(NodeSpec("n0", "2s-12900k", max_slots=2), CFG, params,
+                    max_seq=16)
+        for r in _requests(8):
+            node.submit(r)
+        for _ in range(2):
+            node.step()
+        full_cap = node.topology.active_bandwidth(0.0)
+        node.topology.park_socket(1)
+        node.replan_capacity()
+        assert not node.dispatcher.active[1]
+        assert node.nominal_capacity < full_cap
+        # the live socket keeps serving while socket 1 is frozen
+        for _ in range(4):
+            node.step()
+        node.topology.unpark_socket(1)
+        node.replan_capacity()
+        assert node.dispatcher.active[1]
+        assert node.engines[1].slot_budget == 2
+        while node.has_work:
+            node.step()
+        done = node.poll_finished()
+        assert len(done) == 8
+        # park freezes, never aborts: every request generated its tokens
+        assert all(r.n_generated == r.max_new_tokens for r in done)
+
+    def test_all_sockets_parked_defers_to_pending(self, params):
+        node = Node(NodeSpec("n0", "2s-12900k", max_slots=2), CFG, params,
+                    max_seq=16)
+        node.topology.park_socket(0)
+        node.topology.park_socket(1)
+        node.replan_capacity()
+        assert not node.dispatcher.active.any()
+        i, slot = node.submit(_requests(1)[0])
+        assert i == -1                           # deferred, not a crash
+        assert len(node.dispatcher.pending) == 1
+        node.topology.unpark_socket(0)
+        node.topology.unpark_socket(1)
+        node.replan_capacity()                   # reactivation flushes
+        assert not node.dispatcher.pending
+        while node.has_work:
+            node.step()
+        assert len(node.poll_finished()) == 1
+
+
+# ------------------------------------ InflightDispatcher pending queue --
+class TestDispatcherPending:
+    def _disp(self, params, n=2):
+        engines = [ContinuousBatchingEngine(CFG, params, max_slots=2,
+                                            max_seq=16,
+                                            cost_model=LinearPhaseCost())
+                   for _ in range(n)]
+        return InflightDispatcher(engines)
+
+    def test_submit_with_all_replicas_inactive_defers(self, params):
+        disp = self._disp(params)
+        disp.set_active(0, False)
+        disp.set_active(1, False)
+        rs = _requests(3)
+        for r in rs:
+            i, slot = disp.submit(r)
+            assert i == -1 and slot is None
+        assert disp.pending == rs
+        assert not disp.has_work                 # stepping cannot progress
+        disp.set_active(1, True)                 # first recovery flushes
+        assert not disp.pending
+        assert disp.has_work
+        while disp.has_work:
+            disp.step()
+        assert len(disp.poll_finished()) == 3
+
+    def test_flush_preserves_arrival_order(self, params):
+        disp = self._disp(params)
+        disp.set_active(0, False)
+        disp.set_active(1, False)
+        rs = _requests(4)
+        for r in rs:
+            disp.submit(r)
+        disp.set_active(0, True)
+        waiting = [r for e in disp.engines for r in e.outstanding()]
+        assert [r.arrival_time for r in waiting] == sorted(
+            r.arrival_time for r in rs)
+
+
+# ------------------------------------------- OffsetSnapshot atomic commit --
+class TestAtomicRefresh:
+    def test_failed_refresh_leaves_consistent_snapshot(self):
+        plans = {"a": np.array([3, 5]), "b": np.array([6, 6])}
+        broken = {"flag": False}
+
+        def plan(spec):
+            if broken["flag"] and spec.name == "b":
+                raise RuntimeError("planner died mid-refresh")
+            return plans[spec.name]
+
+        snap = OffsetSnapshot(plan)
+        snap.register(OffsetSpec("a", total=8))
+        snap.register(OffsetSpec("b", total=12))
+        snap.refresh()
+        old_a = snap.boundaries("a").copy()
+        # the planner now produces a *new* split for "a" but dies on "b":
+        # the pre-fix torn commit would publish the new "a" host mirror
+        # against the old device snapshot
+        plans["a"] = np.array([4, 4])
+        broken["flag"] = True
+        with pytest.raises(RuntimeError):
+            snap.refresh()
+        np.testing.assert_array_equal(snap.boundaries("a"), old_a)
+        np.testing.assert_array_equal(
+            np.asarray(snap.device()["a"]), old_a)
+        broken["flag"] = False                   # planner heals: commit
+        snap.refresh()
+        np.testing.assert_array_equal(snap.boundaries("a"), [0, 4, 8])
+
+
+# ------------------------------------------------ RatioStore masked load --
+class TestRatioStoreMasked:
+    def test_expand_active_width_store_into_full_table(self, tmp_path):
+        active = np.array([1, 1, 0, 1, 0, 1], dtype=bool)
+        small = RatioTable(4)
+        small.set("k", [4.0, 3.0, 2.0, 1.0])
+        store = RatioStore(str(tmp_path / "r.json"))
+        store.save(small)
+        full = RatioTable(6)
+        assert not store.load_into(full)         # width mismatch, no mask
+        assert store.load_into(full, active=active)
+        got = full.ratios("k")
+        np.testing.assert_allclose(got[active], small.ratios("k"))
+        np.testing.assert_allclose(got[~active], 1.0)   # init preserved
+
+    def test_compress_full_store_into_active_width_table(self, tmp_path):
+        active = np.array([1, 0, 1, 1, 0, 1], dtype=bool)
+        full = RatioTable(6)
+        full.set("k", [6.0, 5.0, 4.0, 3.0, 2.0, 1.0])
+        store = RatioStore(str(tmp_path / "r.json"))
+        store.save(full)
+        small = RatioTable(4)
+        assert store.load_into(small, active=active)
+        np.testing.assert_allclose(small.ratios("k"),
+                                   full.ratios("k")[active])
+
+    def test_genuinely_different_machine_still_refused(self, tmp_path):
+        small = RatioTable(4)
+        small.set("k", [1.0, 1.0, 1.0, 1.0])
+        store = RatioStore(str(tmp_path / "r.json"))
+        store.save(small)
+        other = RatioTable(6)
+        # a mask that matches neither width combination is not a masked
+        # view of the same machine
+        assert not store.load_into(other,
+                                   active=np.ones(5, dtype=bool))
+        assert not store.load_into(other,
+                                   active=np.ones(6, dtype=bool))
+        mismatched = RatioTable(4, normalize="sum")
+        assert not store.load_into(mismatched)   # conventions still refused

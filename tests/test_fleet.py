@@ -451,3 +451,35 @@ def test_fleet_serve_ratio_store_roundtrip(model, tmp_path, capsys):
     assert run_fleet_mode(args, cfg, params, max_seq=24) == 0
     second = capsys.readouterr().out
     assert "warm-started fleet node ratios" in second
+
+
+def test_fleet_wide_outage_parks_and_recovers(model):
+    """Every node down at once (ISSUE 9 satellite): arrivals during the
+    fleet-wide window must park at the router — not crash ``route()`` —
+    and the first recovery flushes them through full admission + routing.
+    Goodput recovers: the parked-era requests are served, not aborted."""
+    cluster = build_cluster(model)
+    router = FleetRouter(cluster, policy="learned", slo_ttft=SLO_TTFT,
+                         slo_tpot=SLO_TPOT)
+    requests = traffic(n=24, rate=10.0, seed=3)
+    fail_at, recover_at = 0.6, 1.4
+    events = ([NodeEvent(time=fail_at, node=n.name, kind="fail")
+               for n in cluster.nodes]
+              + [NodeEvent(time=recover_at, node=n.name, kind="recover")
+                 for n in cluster.nodes])
+    done = router.run(requests, events)   # pre-fix: route() raised here
+    assert router.n_parked > 0            # the window actually caught traffic
+    assert len(done) == 24
+    assert all(r.finish_time is not None for r in done)
+    parked_era = [r for r in done
+                  if fail_at <= r.arrival_time < recover_at]
+    assert parked_era
+    # parked requests never executed during the outage, so recovery must
+    # serve every one of them to completion
+    assert all(r.finish_reason in (FinishReason.LENGTH, FinishReason.STOP)
+               for r in parked_era)
+    served = [r for r in done if r.finish_reason not in
+              (FinishReason.ABORTED, FinishReason.SHED)]
+    report = LatencyReport.from_requests(served, slo_ttft=SLO_TTFT,
+                                         slo_tpot=SLO_TPOT)
+    assert report.goodput > 0
