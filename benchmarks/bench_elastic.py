@@ -47,6 +47,7 @@ from repro.serving import (
     HybridPhaseCost,
     LatencyReport,
     Request,
+    slo_met,
 )
 from repro.serving.traffic import poisson_requests
 
@@ -83,13 +84,10 @@ def _traffic(cfg, p) -> List[Request]:
         seed=SEED + 1)
 
 
-def _slo_ok(r: Request) -> bool:
-    return (r.ttft is not None and r.ttft <= SLO_TTFT
-            and (r.tpot is None or r.tpot <= SLO_TPOT))
-
-
 def window_fractions(requests: List[Request], width: float) -> List[Optional[float]]:
-    """SLO-goodput fraction per arrival window (None = empty window)."""
+    """SLO-goodput fraction per arrival window (None = empty window).
+    SLO verdicts come from :func:`repro.serving.slo_met` — the same rule
+    :class:`LatencyReport` applies, so windows and goodput agree."""
     horizon = max(r.arrival_time for r in requests) + 1e-9
     n_win = int(np.ceil(horizon / width))
     out: List[Optional[float]] = []
@@ -97,7 +95,7 @@ def window_fractions(requests: List[Request], width: float) -> List[Optional[flo
         t0, t1 = w * width, (w + 1) * width
         rs = [r for r in requests if t0 <= r.arrival_time < t1]
         out.append(None if not rs else
-                   sum(_slo_ok(r) for r in rs) / len(rs))
+                   sum(slo_met(r, SLO_TTFT, SLO_TPOT) for r in rs) / len(rs))
     return out
 
 

@@ -3,18 +3,67 @@
 Prints ``name,us_per_call,derived`` CSV.  Paper-claim checks are printed as
 trailing comments so `python -m benchmarks.run` doubles as a reproduction
 report.
+
+``--json PATH`` additionally writes a machine-readable report
+(``repro.benchmarks/1``): every row with its parsed derived metrics, the
+paper-claim checks, the enforced margin gates from modules exposing
+``check(rows)``, and the git sha the numbers were produced at.
+``--smoke`` asks each module for its reduced problem sizes (modules
+without a ``smoke=`` parameter run at full size), and ``--only NAME``
+restricts the run to modules whose name contains NAME.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import subprocess
 import sys
 
+SCHEMA = "repro.benchmarks/1"
 
-def main() -> None:
-    if "--contracts" in sys.argv[1:]:
-        # run every figure reproduction under the IV runtime contracts
-        # (repro.analysis.invariants): a violated invariant fails the
-        # report instead of silently skewing a reproduced number
+
+def git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except OSError:
+        pass
+    return "unknown"
+
+
+def run_module(mod, smoke: bool) -> list:
+    """``mod.run(smoke=True)`` when asked and supported, else ``mod.run()``
+    (modules without a smoke knob run at full size)."""
+    if smoke:
+        try:
+            return mod.run(smoke=True)
+        except TypeError:
+            pass
+    return mod.run()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--contracts", action="store_true",
+                    help="run every figure reproduction under the IV "
+                         "runtime contracts (repro.analysis.invariants)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced problem sizes where modules support it")
+    ap.add_argument("--only", default=None, metavar="NAME",
+                    help="run only benchmark modules whose name contains "
+                         "NAME (e.g. 'fleet', 'serving')")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the machine-readable report "
+                         "(rows + checks + margin gates + git sha)")
+    args = ap.parse_args(argv)
+
+    if args.contracts:
+        # a violated invariant fails the report instead of silently
+        # skewing a reproduced number
         from repro.analysis import invariants
         invariants.enable()
 
@@ -22,20 +71,36 @@ def main() -> None:
     from . import bench_ratio_trace, bench_kernels, bench_serving
     from . import bench_fleet, bench_elastic
 
+    modules = [bench_gemm_parallel, bench_gemv_bandwidth, bench_e2e,
+               bench_ratio_trace, bench_kernels, bench_serving,
+               bench_fleet, bench_elastic]
+    if args.only:
+        modules = [m for m in modules if args.only in m.__name__]
+        if not modules:
+            print(f"no benchmark module matches {args.only!r}",
+                  file=sys.stderr)
+            return 2
+
     rows = []
-    for mod in (bench_gemm_parallel, bench_gemv_bandwidth, bench_e2e,
-                bench_ratio_trace, bench_kernels, bench_serving,
-                bench_fleet, bench_elastic):
-        rows += mod.run()
+    rows_by_module = {}
+    for mod in modules:
+        mod_rows = run_module(mod, args.smoke)
+        rows_by_module[mod] = mod_rows
+        rows += mod_rows
 
     print("name,us_per_call,derived")
     derived = {}
+    json_rows = []
     for name, us, extra in rows:
         print(f"{name},{us:.1f},{extra}")
+        row_derived = {}
         for kv in str(extra).split("|"):
             if "=" in kv:
                 k, v = kv.split("=", 1)
                 derived[(name, k)] = v
+                row_derived[k] = v
+        json_rows.append({"name": name, "us_per_call": round(float(us), 3),
+                          "derived": row_derived})
 
     def grab(name, key, cast=float):
         v = derived.get((name, key))
@@ -70,6 +135,38 @@ def main() -> None:
     for label, paper, ours in checks:
         print(f"# {label}: paper={paper} ours={ours}")
 
+    # enforced margin gates: modules exposing check(rows) assert their own
+    # pass/fail over the rows they produced (e.g. learned > baselines)
+    gates = []
+    for mod, mod_rows in rows_by_module.items():
+        gate = getattr(mod, "check", None)
+        if gate is None:
+            continue
+        ok = bool(gate(mod_rows))
+        gates.append({"module": mod.__name__.rsplit(".", 1)[-1],
+                      "passed": ok})
+        print(f"# gate {gates[-1]['module']}: "
+              f"{'PASS' if ok else 'FAIL'}")
+
+    if args.json:
+        report = {
+            "schema": SCHEMA,
+            "git_sha": git_sha(),
+            "smoke": bool(args.smoke),
+            "contracts": bool(args.contracts),
+            "rows": json_rows,
+            "checks": [{"label": label, "paper": paper, "ours": ours}
+                       for label, paper, ours in checks],
+            "gates": gates,
+            "all_gates_passed": all(g["passed"] for g in gates),
+        }
+        with open(args.json, "w", encoding="utf-8") as fh:
+            json.dump(report, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"# wrote {args.json}")
+
+    return 0 if all(g["passed"] for g in gates) else 1
+
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

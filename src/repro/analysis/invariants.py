@@ -32,8 +32,10 @@ import), or programmatically / in tests::
         engine.run(...)
 
 A violated contract raises :class:`ContractViolation` (an ``AssertionError``
-subclass, so ``pytest`` reports it as a failure, not an error).  This module
-imports only numpy so instrumented call sites stay cheap to import.
+subclass, so ``pytest`` reports it as a failure, not an error), after asking
+an installed flight recorder (:mod:`repro.obs.recorder`) to dump its decision
+ring.  This module imports only numpy and the stdlib-only events shim so
+instrumented call sites stay cheap to import.
 """
 
 from __future__ import annotations
@@ -42,6 +44,8 @@ import os
 from contextlib import contextmanager
 
 import numpy as np
+
+from repro.core import events as _ev
 
 from .findings import Finding
 
@@ -117,6 +121,14 @@ def contracts(on: bool = True):
 
 
 def _fail(rule: str, message: str):
+    # A tripped contract is exactly the anomaly the flight recorder exists
+    # for: dump the decision ring before raising so the violation ships with
+    # the balancer decisions that led up to it.
+    rec = _ev.RECORDER
+    if rec is not None:
+        trip = getattr(rec, "trip", None)
+        if trip is not None:
+            trip(f"contract {rule}: {message}")
     raise ContractViolation(rule, message)
 
 

@@ -26,6 +26,13 @@ that have actually bitten (or nearly bitten) previous PRs:
 * **RL005 — direct ``ema_update()`` call.**  The EMA must be applied by
   ``RatioTable.observe`` only, so the IV001/IV002 contracts and the race
   hooks see every update.
+* **RL006 — raw ``print()`` in library code.**  Telemetry from the
+  balancing stack must flow through a :class:`~repro.runtime.StatsSink`,
+  the ``repro.core.events`` shim, or the ``repro.obs`` exporters — a
+  stray ``print`` is unsinkable (no trace, no metrics, no recorder) and
+  pollutes drivers' stdout.  CLI surfaces are exempt: anything under
+  ``repro/launch/``, ``__main__.py`` modules, ``main()`` functions, and
+  ``if __name__ == "__main__":`` blocks.
 
 Escapes: ``# lint: virtual-clock-module`` anywhere in a file opts it into
 the RL001 virtual set; a trailing ``# lint: allow(RL00x)`` (or bare
@@ -54,6 +61,8 @@ RULES = {
     "RL004": "jax.jit over a closure capturing mutable ratio state (pass "
              "it as an argument or snapshot it)",
     "RL005": "ema_update() called outside RatioTable.observe",
+    "RL006": "raw print() in library code (route telemetry through a "
+             "StatsSink / the events shim / repro.obs)",
 }
 
 # Modules whose clocks are virtual by construction (suffix/prefix match on
@@ -73,6 +82,10 @@ VIRTUAL_MARKER = "# lint: virtual-clock-module"
 # The only modules allowed to spell ratio-table keys / apply the EMA.
 KEY_CONSTRUCTOR_FILES = ("repro/kernels/dispatch.py", "repro/serving/phases.py")
 EMA_FILES = ("repro/core/ratio.py", "repro/runtime/table.py")
+
+# RL006: CLI surfaces where print() IS the output channel.
+PRINT_EXEMPT_DIRS = ("repro/launch/",)
+PRINT_EXEMPT_FILES = ("__main__.py",)
 
 _RAW_KEY_RE = re.compile(r"^(membw|avx_vnni|avx2)/[A-Za-z0-9_]+$")
 _WALL_ATTRS = {"time", "perf_counter", "monotonic", "process_time",
@@ -335,6 +348,34 @@ def lint_source(source: str, path: str = "<string>", *,
                 check_jitted_body(target, node)
             elif isinstance(target, ast.Name) and target.id in fn_defs:
                 check_jitted_body(fn_defs[target.id], node)
+
+    # ------------------------------------ RL006: print() in library code --
+    if not _matches(norm, PRINT_EXEMPT_FILES, PRINT_EXEMPT_DIRS):
+        def _is_name_main_test(test) -> bool:
+            return (isinstance(test, ast.Compare)
+                    and isinstance(test.left, ast.Name)
+                    and test.left.id == "__name__"
+                    and any(isinstance(c, ast.Constant)
+                            and c.value == "__main__"
+                            for c in test.comparators))
+
+        exempt = set()
+        for node in ast.walk(tree):
+            if (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and node.name == "main") or \
+                    (isinstance(node, ast.If)
+                     and _is_name_main_test(node.test)):
+                for sub in ast.walk(node):
+                    exempt.add(id(sub))
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Name) and \
+                    node.func.id == "print" and id(node) not in exempt:
+                report("RL006", node,
+                       "raw print() in library code; emit through a "
+                       "StatsSink, the events shim, or a repro.obs "
+                       "exporter (CLI surfaces: repro/launch/, "
+                       "__main__.py, main())")
 
     # --------------------------------------- RL005: stray ema_update() --
     if not _matches(norm, EMA_FILES):

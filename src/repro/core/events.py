@@ -38,7 +38,9 @@ from dataclasses import dataclass
 __all__ = [
     "Event",
     "TRACER",
+    "RECORDER",
     "install",
+    "install_recorder",
     "current_task",
     "push_task",
     "pop_task",
@@ -50,6 +52,12 @@ __all__ = [
     "emit_release",
     "emit_fork",
     "emit_join",
+    "emit_span",
+    "emit_counter",
+    "emit_instant",
+    "push_scope",
+    "pop_scope",
+    "record",
 ]
 
 # The installed tracer (anything with ``emit(Event)``), or None.  Module
@@ -171,3 +179,97 @@ def emit_fork(child_task: str, where: str = "") -> None:
 def emit_join(child_task: str, where: str = "") -> None:
     """The current task has awaited ``child_task``'s completion."""
     _emit("join", child_task, "", where)
+
+
+# ------------------------------------------------------------------- spans --
+# Virtual-clock span/counter hooks for the ``repro.obs`` tracer.  The same
+# TRACER slot serves both the race detector (which only implements ``emit``)
+# and the span tracer: each hook duck-types on the tracer method it needs, so
+# a tracer that lacks it costs one getattr and nothing else.  ``args`` and
+# ``values`` may be zero-argument callables — evaluated only when a matching
+# tracer is installed, so building the payload is free on the disabled path.
+
+def emit_span(track: str, name: str, start: float, dur: float,
+              cat: str = "", args=None) -> None:
+    """One completed span on virtual-clock ``track`` (seconds)."""
+    t = TRACER
+    if t is None:
+        return
+    fn = getattr(t, "span", None)
+    if fn is None:
+        return
+    if callable(args):
+        args = args()
+    fn(track, name, start, dur, cat, args)
+
+
+def emit_counter(track: str, t_now: float, values) -> None:
+    """Sampled counter values (``{series: number}``) on ``track``."""
+    t = TRACER
+    if t is None:
+        return
+    fn = getattr(t, "counter", None)
+    if fn is None:
+        return
+    if callable(values):
+        values = values()
+    fn(track, t_now, values)
+
+
+def emit_instant(track: str, name: str, t_now: float, args=None) -> None:
+    """A zero-duration marker (routing/admission decisions)."""
+    t = TRACER
+    if t is None:
+        return
+    fn = getattr(t, "instant", None)
+    if fn is None:
+        return
+    if callable(args):
+        args = args()
+    fn(track, name, t_now, args)
+
+
+def push_scope(name: str) -> None:
+    """Enter a naming scope (node/replica) grouping subsequent spans."""
+    t = TRACER
+    if t is None:
+        return
+    fn = getattr(t, "push_scope", None)
+    if fn is not None:
+        fn(name)
+
+
+def pop_scope() -> None:
+    t = TRACER
+    if t is None:
+        return
+    fn = getattr(t, "pop_scope", None)
+    if fn is not None:
+        fn()
+
+
+# ---------------------------------------------------------------- recorder --
+# The flight-recorder channel is independent of the tracer: balancer
+# decisions (ratio snapshots, offset refreshes, capacity/admission events)
+# are recorded even when no trace is being exported, so an SLO burn or a
+# tripped IV contract can dump the decisions that led up to it.
+RECORDER = None
+
+
+def install_recorder(recorder):
+    """Install a decision recorder (anything with ``record(kind, key, t,
+    payload)``), or ``None`` to disable; returns the previous recorder."""
+    global RECORDER
+    prev = RECORDER
+    RECORDER = recorder
+    return prev
+
+
+def record(kind: str, key: str, t: float = 0.0, **payload) -> None:
+    """Record one balancer/admission decision.  One global load + ``None``
+    check when disabled; payload kwargs are only assembled by the caller, so
+    keep call sites to cheap scalars."""
+    r = RECORDER
+    if r is None:
+        return
+    r.record(kind, key, t, payload)

@@ -28,6 +28,8 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
+from repro.core import events as _ev
+
 __all__ = ["CoreSpec", "CapacityEvent", "SimulatedHybridCPU", "make_machine",
            "MACHINES"]
 
@@ -103,11 +105,16 @@ class SimulatedHybridCPU:
         forever — the drift-test idiom that is valid on every pool timeline
         regardless of clock skew)."""
         self.capacity.append(CapacityEvent(t_start, t_end, core, "park"))
+        if _ev.RECORDER is not None:
+            _ev.record("capacity", f"core{core}", t=t_start, action="park",
+                       t_end=None if t_end == float("inf") else t_end)
 
     def unpark(self, core: int) -> None:
         """Drop every park event for ``core`` (scale events stay)."""
         self.capacity = [ev for ev in self.capacity
                          if not (ev.kind == "park" and ev.core == core)]
+        if _ev.RECORDER is not None:
+            _ev.record("capacity", f"core{core}", action="unpark")
 
     def set_freq_scale(self, core: int, factor: float, t_start: float = 0.0,
                        t_end: float = float("inf")) -> None:
@@ -115,6 +122,10 @@ class SimulatedHybridCPU:
         The core stays active — planners keep it and re-learn its ratio."""
         self.capacity.append(CapacityEvent(t_start, t_end, core, "scale",
                                            factor))
+        if _ev.RECORDER is not None:
+            _ev.record("capacity", f"core{core}", t=t_start, action="scale",
+                       factor=factor,
+                       t_end=None if t_end == float("inf") else t_end)
 
     def clear_capacity(self, core: "int | None" = None) -> None:
         """Drop all capacity events (or just ``core``'s)."""

@@ -195,9 +195,14 @@ class VirtualWorkerPool:
             finally:
                 if tracing:
                     _ev.pop_task()
-            times[st.worker] += self.machine.task_time(
-                st.worker, self.isa, st.work, self.clock + times[st.worker]
-            )
+            t_start = self.clock + times[st.worker]
+            dt = self.machine.task_time(st.worker, self.isa, st.work, t_start)
+            times[st.worker] += dt
+            if tracing:
+                _ev.emit_span(
+                    f"core{st.worker}", self.isa, t_start, dt, cat="pool",
+                    args=lambda st=st: {"start": st.start, "size": st.size,
+                                        "work": st.work})
         if tracing:
             for label in forked.values():
                 _ev.emit_join(label, where="VirtualWorkerPool.run")

@@ -33,6 +33,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core import events as _ev
 from repro.serving import DECODE, PREFILL, FinishReason, Request, RequestState
 
 __all__ = ["AdmissionController"]
@@ -68,11 +69,15 @@ class AdmissionController:
         depth = self._fleet_depth(router)
         if self.queue_cap is not None and depth >= self.queue_cap:
             self._shed(request, router.now)
+            self._note(router, "shed", depth, reason="queue_cap")
             return False
         if request.deadline is not None:
             est = self.estimate_finish(request, router)
             if est is not None and est > request.deadline:
                 self._shed(request, router.now)
+                self._note(router, "shed", depth, reason="deadline",
+                           estimate=round(float(est), 6),
+                           deadline=float(request.deadline))
                 return False
         if (self.degrade_depth is not None and depth >= self.degrade_depth
                 and request.max_new_tokens > self.min_new_tokens):
@@ -81,6 +86,8 @@ class AdmissionController:
                 int(request.max_new_tokens * self.degrade_factor))
             request.degraded = True
             self.n_degraded += 1
+            self._note(router, "degrade", depth,
+                       max_new_tokens=int(request.max_new_tokens))
         return True
 
     def estimate_finish(self, request: Request, router) -> Optional[float]:
@@ -123,6 +130,17 @@ class AdmissionController:
     def _fleet_depth(router) -> int:
         return sum(node.queue_depth for node in router.cluster.nodes
                    if node.active)
+
+    @staticmethod
+    def _note(router, decision: str, depth: int, **payload) -> None:
+        """Telemetry for a non-default verdict: a trace instant plus a
+        flight-recorder record (both no-ops when nothing is installed)."""
+        _ev.emit_instant("fleet", f"admission:{decision}", router.now,
+                         args=lambda: {"decision": decision,
+                                       "depth": int(depth), **payload})
+        if _ev.RECORDER is not None:
+            _ev.record("admission", decision, t=router.now,
+                       depth=int(depth), **payload)
 
     def _shed(self, request: Request, now: float) -> None:
         request.state = RequestState.FINISHED

@@ -23,6 +23,7 @@ from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.core import events as _ev
 from repro.serving import (
     ContinuousBatchingEngine,
     HybridPhaseCost,
@@ -141,6 +142,13 @@ class Node:
     def step(self) -> List[IterationStats]:
         if not self.active:
             return []
+        if _ev.TRACER is not None:
+            # node scope: one trace process per node (replicas nest inside)
+            _ev.push_scope(f"node:{self.name}")
+            try:
+                return self.dispatcher.step()
+            finally:
+                _ev.pop_scope()
         return self.dispatcher.step()
 
     def poll_finished(self) -> List[Request]:

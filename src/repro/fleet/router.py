@@ -28,6 +28,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core import events as _ev
 from repro.runtime import Balancer, Plan, RatioTable, RecursivePolicy, StatsSink
 from repro.serving import DECODE, PREFILL, Request
 
@@ -194,10 +195,24 @@ class FleetRouter:
         if not any(node.active for node in self.cluster.nodes):
             self._parked.append(request)
             self.n_parked += 1
+            if _ev.RECORDER is not None:
+                _ev.record("admission", "parked", t=self.now,
+                           decision="parked",
+                           arrival=float(request.arrival_time))
             return None
         i = self.route(request)
-        self.cluster.nodes[i].submit(request)
+        node = self.cluster.nodes[i]
+        node.submit(request)
         self.routed[i] += 1
+        _ev.emit_instant(
+            "fleet", f"route:{node.name}", self.now,
+            args=lambda: {"rid": int(request.request_id),
+                          "node": node.name, "policy": self.policy,
+                          "prompt_len": int(request.prompt_len)})
+        if _ev.RECORDER is not None:
+            _ev.record("route", node.name, t=self.now,
+                       rid=int(request.request_id), policy=self.policy,
+                       queue_depth=int(node.queue_depth))
         return i
 
     # ------------------------------------------------------------ driving --
@@ -228,6 +243,11 @@ class FleetRouter:
                 self._update_tps(phase, acc_u, acc_t)
                 acc_u[:] = 0
                 acc_t[:] = 0.0
+                _ev.emit_counter(
+                    f"ratio:fleet:{phase}", self.now,
+                    lambda phase=phase: {
+                        f"n{i}": round(float(r), 5)
+                        for i, r in enumerate(self.table.ratios(phase))})
         for i, node in enumerate(cluster.nodes):
             for r in node.poll_finished():
                 self._observe_latency(i, r)
@@ -245,6 +265,12 @@ class FleetRouter:
                 (1 - a) * tps[i] + a * sample)
 
     def _observe_latency(self, i: int, r: Request) -> None:
+        if _ev.RECORDER is not None and (r.ttft is not None
+                                         or r.tpot is not None):
+            _ev.record("latency", self.cluster.nodes[i].name, t=self.now,
+                       rid=int(r.request_id),
+                       ttft=(None if r.ttft is None else float(r.ttft)),
+                       tpot=(None if r.tpot is None else float(r.tpot)))
         a = self._lat_alpha
         if r.ttft is not None:
             e = self._ttft_ewma
@@ -259,6 +285,12 @@ class FleetRouter:
     def apply_event(self, event: NodeEvent) -> None:
         node = self.cluster.by_name[event.node]
         i = self.cluster.nodes.index(node)
+        _ev.emit_instant("fleet", f"{event.kind}:{event.node}", self.now,
+                         args=lambda: {"node": event.node,
+                                       "kind": event.kind})
+        if _ev.RECORDER is not None:
+            _ev.record("node_event", event.node, t=self.now,
+                       event=event.kind)
         if event.kind == "fail":
             requeued = node.fail()
             # mask the dead node out of the feedback window: its partial

@@ -344,13 +344,38 @@ class HybridKernelDispatcher:
                     work=float(hi - lo) * work_per_unit, fn=fn)
             for w, (lo, hi) in enumerate(plan.ranges)
         ]
-        times = self._pool(spec.isa).run(subtasks)
+        pool = self._pool(spec.isa)
+        tracing = _ev.TRACER is not None
+        # virtual pools carry a deterministic clock; threaded pools don't,
+        # so only virtual dispatch gets region spans (wall-clock spans
+        # would break byte-identical traces)
+        t0 = getattr(pool, "clock", None) if tracing else None
+        times = pool.run(subtasks)
         moved = float(total) * bytes_per_unit
         st = bal.report(plan, times, update=update and self.dynamic,
                         label=f"{spec.name}@{spec.table_key}",
                         bytes_moved=moved)
         if moved > 0 and st.makespan > 0:
             self._account(spec.isa, moved, st.makespan)
+        if t0 is not None:
+            _ev.emit_span(
+                f"dispatch:{spec.isa}", f"{spec.name}@{spec.table_key}",
+                t0, pool.clock - t0, cat="dispatch",
+                args=lambda: {"units": int(total),
+                              "imbalance": round(st.imbalance, 4)})
+            _ev.emit_counter(
+                f"ratio:{spec.table_key}", pool.clock,
+                lambda: {f"w{i}": round(float(r), 5) for i, r in
+                         enumerate(self.table.ratios(spec.table_key))})
+            _ev.emit_counter(
+                f"capacity:{spec.isa}", pool.clock,
+                lambda: {"active_workers": int(
+                    self.capacity_mask(spec.isa).sum())})
+            if moved > 0 and self.machine is not None:
+                _ev.emit_counter(
+                    f"bw:{spec.isa}", pool.clock,
+                    lambda: {"achieved_bw_frac": round(
+                        self.achieved_bandwidth_fraction(spec.isa), 5)})
         if self.keep_stats:
             self.stats.append(st)
         self.last_stats = st

@@ -24,11 +24,13 @@ Modes:
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_config, reduced_config
+from repro.core import events as _ev
 from repro.core.hybrid_sim import MACHINES
 from repro.core.tuner import KernelTuner, TunerStore
 from repro.kernels import (
@@ -63,7 +65,7 @@ def replica_slot_counts(batch: int, replicas: int) -> list:
     return [max(1, base + (1 if i < rem else 0)) for i in range(replicas)]
 
 
-def run_fleet_mode(args, cfg, params, max_seq: int) -> int:
+def run_fleet_mode(args, cfg, params, max_seq: int, registry=None) -> int:
     """``--fleet``: the default heterogeneous 4-node cluster behind the
     recursive FleetRouter, under diurnal heavy-tailed traffic with a
     mid-run failure window on the largest node."""
@@ -106,8 +108,13 @@ def run_fleet_mode(args, cfg, params, max_seq: int) -> int:
     span = args.requests / args.rate
     events = failure_window("big", fail_at=0.25 * span,
                             recover_at=0.6 * span)
+    t_wall = time.perf_counter()
     done = router.run(requests, events)
-    report = LatencyReport.from_requests(done, slo_ttft=2.0, slo_tpot=0.25)
+    report = LatencyReport.from_requests(
+        done, slo_ttft=2.0, slo_tpot=0.25,
+        wall_duration=time.perf_counter() - t_wall)
+    if registry is not None:
+        report.publish(registry)
     names = [n.name for n in cluster.nodes]
     print(f"[serve] fleet {names} policy={args.fleet_policy} "
           f"routed={router.routed.tolist()} requeued={router.n_requeued}")
@@ -186,6 +193,20 @@ def main() -> int:
                     help="JSON path to warm-start/persist the kernel "
                          "tuner's block-shape tables (shared across "
                          "replicas, like --ratios for ratio tables)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace_event JSON of the "
+                         "run: spans on the virtual clock at every "
+                         "balancing level plus ratio / bandwidth / "
+                         "capacity counter tracks")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write run metrics (TTFT/TPOT histograms, "
+                         "goodput): Prometheus text exposition, or a JSON "
+                         "dump when PATH ends in .json")
+    ap.add_argument("--flight-recorder", default=None, metavar="PATH",
+                    help="record balancer decisions (ratio reports, offset "
+                         "refreshes, capacity/admission events) in a "
+                         "bounded ring dumped to PATH; auto-dumps on SLO "
+                         "burn or contract trip")
     args = ap.parse_args()
     if args.topology:
         if args.balanced_head:
@@ -208,12 +229,57 @@ def main() -> int:
     max_seq = args.prompt_len + args.steps + 8
     slot_counts = replica_slot_counts(args.batch, args.replicas)
 
+    # observability: install the tracer / flight recorder before any mode
+    # runs, write the artifacts after it returns (or raises)
+    tracer = recorder = registry = None
+    prev_tracer = prev_recorder = None
+    if args.trace:
+        from repro.obs import SpanTracer
+        tracer = SpanTracer()
+        prev_tracer = _ev.install(tracer)
+    if args.flight_recorder:
+        from repro.obs import FlightRecorder
+        recorder = FlightRecorder(
+            path=args.flight_recorder,
+            slo_ttft=2.0 if args.fleet else None,
+            slo_tpot=0.25 if args.fleet else None)
+        prev_recorder = _ev.install_recorder(recorder)
+    if args.metrics:
+        from repro.obs import MetricsRegistry
+        registry = MetricsRegistry()
+    try:
+        return run_mode(args, cfg, params, max_seq, slot_counts, registry)
+    finally:
+        if tracer is not None:
+            _ev.install(prev_tracer)
+            tracer.write(args.trace)
+            print(f"[serve] wrote trace to {args.trace} "
+                  f"({tracer.n_spans} spans, {tracer.n_counters} counter "
+                  f"samples, {tracer.n_instants} instants)")
+        if recorder is not None:
+            _ev.install_recorder(prev_recorder)
+            if recorder.last_dump is None:
+                recorder.trip("exit")
+            print(f"[serve] flight recorder: {len(recorder.records())} "
+                  f"records, {len(recorder.trips)} trip(s) -> "
+                  f"{args.flight_recorder}")
+        if registry is not None:
+            if args.metrics.endswith(".json"):
+                registry.write_json(args.metrics)
+            else:
+                with open(args.metrics, "w", encoding="utf-8") as fh:
+                    fh.write(registry.prometheus_text())
+            print(f"[serve] wrote metrics to {args.metrics}")
+
+
+def run_mode(args, cfg, params, max_seq, slot_counts, registry=None) -> int:
+    """Dispatch to the selected serving mode (fleet / legacy / default)."""
     if args.fleet:
         if (args.legacy_batch or args.balanced_head or args.balanced_trunk
                 or args.topology):
             raise SystemExit("--fleet is a standalone mode: the fleet owns "
                              "its topologies and cost models")
-        return run_fleet_mode(args, cfg, params, max_seq)
+        return run_fleet_mode(args, cfg, params, max_seq, registry)
 
     if args.legacy_batch:
         rng = np.random.default_rng(args.seed)
@@ -276,6 +342,7 @@ def main() -> int:
         prompt_len=args.prompt_len, max_new_tokens=args.steps,
         seed=args.seed)
     routed = np.zeros(args.replicas, dtype=np.int64)
+    t_wall = time.perf_counter()
     for r in requests:
         # Let in-flight work progress up to this arrival so per-phase
         # throughput feedback from earlier requests steers the routing of
@@ -286,8 +353,12 @@ def main() -> int:
         routed[i] += 1
     disp.run_until_idle()
 
-    report = LatencyReport.from_requests(requests)
     clock = "virtual" if args.machine != "wall" else "wall"
+    report = LatencyReport.from_requests(
+        requests, clock=clock,
+        wall_duration=time.perf_counter() - t_wall)
+    if registry is not None:
+        report.publish(registry)
     print(f"[serve] {args.replicas} replica(s), slots={slot_counts}, "
           f"routed={routed.tolist()} ({clock} clock)")
     for line in report.lines():

@@ -26,6 +26,7 @@ from typing import Optional, Protocol, runtime_checkable
 import numpy as np
 
 from repro.analysis import invariants as _contracts
+from repro.core import events as _ev
 
 from .policy import BalancePolicy, Plan
 
@@ -186,6 +187,14 @@ class Balancer:
             self.stats.append(st)
         if self.sink is not None:
             self.sink.emit(st)
+        if _ev.RECORDER is not None:
+            _ev.record(
+                "ratio", st.key,
+                makespan=st.makespan,
+                imbalance=round(st.imbalance, 6),
+                counts=np.asarray(st.counts).tolist(),
+                ratios=(None if st.ratios is None
+                        else np.round(st.ratios, 6).tolist()))
         return st
 
     @contextmanager

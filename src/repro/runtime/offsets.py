@@ -35,6 +35,7 @@ from typing import Callable, Dict
 import numpy as np
 
 from repro.analysis import invariants as _contracts
+from repro.core import events as _ev
 
 __all__ = ["OffsetSpec", "OffsetSnapshot"]
 
@@ -125,6 +126,9 @@ class OffsetSnapshot:
             device[name] = jnp.asarray(bounds)
         self._host = host
         self._device = device
+        if _ev.RECORDER is not None:
+            for name, bounds in host.items():
+                _ev.record("offsets", name, boundaries=bounds.tolist())
         return device
 
     def device(self) -> Dict[str, object]:

@@ -33,7 +33,7 @@ from .phases import (
     TRUNK_KINDS,
     phase_kernel_key,
 )
-from .metrics import LatencyReport, percentiles
+from .metrics import LatencyReport, percentiles, slo_met
 from .request import FinishReason, Request, RequestState
 from .scheduler import IterationScheduler, IterationStats, PrefillChunk
 from .slots import SlotCacheManager
@@ -54,6 +54,7 @@ __all__ = [
     "SlotCacheManager",
     "LatencyReport",
     "percentiles",
+    "slo_met",
     "poisson_requests",
     "PREFILL",
     "DECODE",

@@ -188,8 +188,22 @@ class InflightDispatcher:
         ratios keep learning even when replicas never work in the same
         iteration.  Deactivated replicas are not stepped and contribute
         empty stats (units 0 -> masked out of the update)."""
-        stats = [e.step() if self.active[i] else IterationStats(now=e.now)
-                 for i, e in enumerate(self.engines)]
+        tracing = _ev.TRACER is not None
+        stats = []
+        for i, e in enumerate(self.engines):
+            if not self.active[i]:
+                stats.append(IterationStats(now=e.now))
+                continue
+            if tracing:
+                # replica scope: the engine's spans (and everything its
+                # cost model dispatches) land in this replica's process
+                _ev.push_scope(f"replica{i}")
+                try:
+                    stats.append(e.step())
+                finally:
+                    _ev.pop_scope()
+            else:
+                stats.append(e.step())
         for phase, units, times in (
             (PREFILL,
              np.array([s.prefill_tokens for s in stats], dtype=np.int64),

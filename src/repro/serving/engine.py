@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import events as _ev
 from repro.models import forward, init_state
 from repro.models.attention import KVCache
 from repro.runtime import (
@@ -552,6 +553,11 @@ class ContinuousBatchingEngine:
                     jax.device_get(recs))
             req.prefill_done += chunk.length
             sched.prefill_advanced(chunk)
+            if self.cost_model is not None:
+                # span on the engine's virtual clock (wall-timed engines
+                # stay untraced: their timestamps are not deterministic)
+                _ev.emit_span("engine", PREFILL, self.now, dt, cat="engine",
+                              args=lambda: {"tokens": int(chunk.length)})
             self.now += dt
             st.prefill_tokens = chunk.length
             st.prefill_seconds = dt
@@ -589,6 +595,10 @@ class ContinuousBatchingEngine:
             if self._compiled_trunk:
                 self._offsets = self.balanced_trunk.compiled_feedback(
                     jax.device_get(recs))
+            if self.cost_model is not None:
+                _ev.emit_span(
+                    "engine", DECODE, self.now, dt, cat="engine",
+                    args=lambda: {"batch": len(self._running)})
             self.now += dt
             st.decode_tokens = len(self._running)
             st.decode_seconds = dt
@@ -602,6 +612,9 @@ class ContinuousBatchingEngine:
         st.n_running = len(self._running)
         st.n_waiting = self.scheduler.n_waiting()
         st.now = self.now
+        if self.cost_model is not None:
+            _ev.emit_counter("queue", self.now,
+                             lambda: {"depth": float(self.queue_depth)})
         return st
 
     def _step_prefill_lanes(self, chunks, st: IterationStats) -> None:
@@ -650,6 +663,11 @@ class ContinuousBatchingEngine:
         if self._compiled_trunk:
             self._offsets = self.balanced_trunk.compiled_feedback(
                 jax.device_get(recs))
+        if self.cost_model is not None:
+            _ev.emit_span(
+                "engine", PREFILL, self.now, dt, cat="engine",
+                args=lambda: {"tokens": int(length * len(chunks)),
+                              "lanes": len(chunks)})
         self.now += dt
         st.prefill_tokens = length * len(chunks)
         st.prefill_seconds = dt

@@ -26,6 +26,7 @@ from typing import Optional, Protocol, runtime_checkable
 
 import numpy as np
 
+from repro.core import events as _ev
 from repro.core.hybrid_sim import SimulatedHybridCPU, make_machine
 from repro.core.pool import VirtualWorkerPool
 from repro.kernels import dispatch as _kernel
@@ -167,12 +168,33 @@ class HybridPhaseCost:
     def _region(self, phase: str, n_units: int, work_per_unit: float,
                 bytes_total: float = 0.0) -> float:
         bal = self._balancers[phase]
+        pool = self._pools[phase]
+        tracing = _ev.TRACER is not None
+        t0 = pool.clock
         plan = bal.plan(n_units)
-        times = run_plan(self._pools[phase], plan, None, work_per_unit)
+        times = run_plan(pool, plan, None, work_per_unit)
         st = bal.report(plan, times, bytes_moved=bytes_total)
         if bytes_total > 0 and st.makespan > 0:
             self._bytes[phase] += bytes_total
             self._busy[phase] += st.makespan
+        if tracing:
+            _ev.emit_span(f"phase:{phase}", phase, t0, pool.clock - t0,
+                          cat="phase",
+                          args=lambda: {"units": int(n_units),
+                                        "imbalance": round(st.imbalance, 4)})
+            _ev.emit_counter(
+                f"ratio:{phase}", pool.clock,
+                lambda: {f"w{i}": round(float(r), 5)
+                         for i, r in enumerate(self.table.ratios(phase))})
+            _ev.emit_counter(
+                "capacity", pool.clock,
+                lambda: {"active_cores": int(
+                    self.machine.active_mask(pool.clock).sum())})
+            if bytes_total > 0:
+                _ev.emit_counter(
+                    f"bw:{phase}", pool.clock,
+                    lambda: {"achieved_bw_frac": round(
+                        self.achieved_bandwidth_fraction(phase), 5)})
         return float(times.max(initial=0.0))
 
     def prefill_seconds(self, n_tokens: int, ctx: int) -> float:

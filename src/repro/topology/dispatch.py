@@ -217,16 +217,34 @@ class TopologyDispatcher:
         check = _contracts.contracts_enabled()
         inner_before = sum(d._bytes.get(spec.isa, 0.0)
                            for d in self.socket_dispatchers) if check else 0.0
+        tracing = _ev.TRACER is not None
         times = np.zeros(self.n_sockets)
         for s, (lo, hi) in enumerate(plan.ranges):
             if hi <= lo:
                 continue
             scale = self._work_scale(spec.isa, s, (lo, hi), placement)
+            if tracing:
+                pool = self.socket_dispatchers[s]._pools.get(spec.isa)
+                t0 = float(getattr(pool, "clock", 0.0)) if pool else 0.0
             times[s] = run_socket(s, lo, hi, scale)
+            if tracing:
+                _ev.emit_span(
+                    f"socket{s}", f"{spec.name}@{spec.table_key}",
+                    t0, times[s], cat="socket",
+                    args=lambda s=s, lo=lo, hi=hi: {"socket": s,
+                                                    "units": hi - lo})
         moved = float(total) * bytes_per_unit
         st = bal.report(plan, times, update=update and self.dynamic,
                         label=f"{spec.name}@{spec.table_key}",
                         bytes_moved=moved)
+        if tracing and self.table is not None:
+            now = max((float(getattr(d._pools.get(spec.isa), "clock", 0.0))
+                       if d._pools.get(spec.isa) else 0.0
+                       for d in self.socket_dispatchers), default=0.0)
+            _ev.emit_counter(
+                f"ratio:socket:{spec.table_key}", now,
+                lambda: {f"s{i}": round(float(r), 5) for i, r in
+                         enumerate(self.table.ratios(spec.table_key))})
         # Sockets run concurrently: the region occupies max(times) wall
         # seconds while moving the sum of the per-socket traffic.
         if moved > 0 and st.makespan > 0:

@@ -1,0 +1,12 @@
+"""Corpus: RL006 bad — raw print() telemetry in library code."""
+
+
+def report_imbalance(stats):
+    print(f"imbalance={stats.imbalance:.3f}")   # flagged: unsinkable
+    return stats.makespan
+
+
+class Dispatcher:
+    def step(self):
+        print("stepping")                       # flagged: library class
+        return []

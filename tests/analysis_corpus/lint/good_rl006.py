@@ -1,0 +1,16 @@
+"""Corpus: RL006 good — telemetry sinked, prints only on CLI surfaces."""
+
+
+def report_imbalance(stats, sink):
+    sink.emit(stats)
+    return stats.makespan
+
+
+def main():
+    print("CLI output is fine inside main()")
+    return 0
+
+
+if __name__ == "__main__":
+    print("and inside the __main__ block")
+    raise SystemExit(main())

@@ -30,7 +30,7 @@ from repro.analysis.races import find_races, trace
 from repro.core.events import Event
 
 CORPUS = Path(__file__).parent / "analysis_corpus"
-LINT_RULES = ["RL001", "RL002", "RL003", "RL004", "RL005"]
+LINT_RULES = ["RL001", "RL002", "RL003", "RL004", "RL005", "RL006"]
 
 
 def _load_corpus_module(relpath: str):

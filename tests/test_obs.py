@@ -1,0 +1,407 @@
+"""Observability subsystem (PR 10): virtual-clock tracing, metrics
+exposition, and the anomaly flight recorder.
+
+Five groups:
+
+* tracer — SpanTracer scope/track bookkeeping, Perfetto schema validation
+  (positive and negative), and byte-identical traces across same-seed
+  fleet runs;
+* zero-cost — with no tracer (or a tracer lacking the span hooks, like
+  the race detector) the emit hooks never evaluate their payload
+  callables;
+* recorder — bounded ring, SLO-burn self-trip on a seeded fleet run,
+  contract (IV00x) trips dumping the ring, crash-proof trip;
+* metrics — counters/gauges/histograms, Prometheus text exposition and
+  its lint (positive and negative), LatencyReport.to_dict/publish;
+* audit — the compiled decode step stays zero-host-callback (JA001) with
+  a SpanTracer installed.
+"""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import events as _ev
+from repro.fleet import Cluster, FleetRouter, NodeSpec, fleet_requests
+from repro.models import init_params
+from repro.models.transformer import ModelConfig
+from repro.obs import (
+    FlightRecorder,
+    MetricsRegistry,
+    SpanTracer,
+    TPOT_BUCKETS,
+    TTFT_BUCKETS,
+    lint_exposition,
+    validate_trace,
+)
+from repro.serving import LatencyReport
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab_size=128, dtype="float32")
+
+SPECS = (
+    NodeSpec("fast", "ultra-125h", max_slots=3),
+    NodeSpec("mid", "core-12900k", max_slots=3),
+)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return CFG, init_params(CFG, jax.random.key(0))
+
+
+@pytest.fixture(autouse=True)
+def _clean_hooks():
+    """No test may leak an installed tracer/recorder into the next."""
+    yield
+    _ev.install(None)
+    _ev.install_recorder(None)
+
+
+def traced_fleet_run(model, *, seed=1, n=10, recorder=None):
+    """One small two-node fleet run under a fresh SpanTracer (and an
+    optional recorder); returns the tracer."""
+    cfg, params = model
+    cluster = Cluster.build(SPECS, cfg, params, max_seq=40, seed=0)
+    router = FleetRouter(cluster, slo_ttft=2.0, slo_tpot=0.25)
+    requests = fleet_requests(n, base_rate=8.0, vocab_size=cfg.vocab_size,
+                              prompt_len=(4, 12), max_new_tokens=(3, 5),
+                              seed=seed)
+    tracer = SpanTracer()
+    prev = _ev.install(tracer)
+    prev_rec = _ev.install_recorder(recorder) if recorder is not None else None
+    try:
+        router.run(requests)
+    finally:
+        _ev.install(prev)
+        if recorder is not None:
+            _ev.install_recorder(prev_rec)
+    return tracer
+
+
+def trace_bytes(tracer) -> bytes:
+    return json.dumps(tracer.to_chrome(), separators=(",", ":"),
+                      sort_keys=True).encode()
+
+
+# ------------------------------------------------------------------ tracer --
+def test_tracer_scopes_and_ids():
+    t = SpanTracer()
+    t.span("core0", "membw", 0.0, 1e-3, cat="pool")
+    t.push_scope("node:big")
+    t.push_scope("replica0")
+    t.span("core0", "membw", 0.0, 2e-3)
+    t.counter("queue", 1e-3, {"depth": 3})
+    t.pop_scope()
+    t.pop_scope()
+    t.instant("fleet", "route:big", 2e-3, {"rid": 1})
+    evs = t.chrome_events()
+    procs = {e["args"]["name"]: e["pid"] for e in evs
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert set(procs) == {"main", "node:big/replica0"}
+    # first-seen pid order, distinct pids, spans land in their scope's pid
+    assert procs["main"] == 1 and procs["node:big/replica0"] == 2
+    spans = [e for e in evs if e["ph"] == "X"]
+    assert [s["pid"] for s in spans] == [1, 2]
+    # microsecond conversion
+    assert spans[0]["dur"] == 1000.0
+    assert t.n_spans == 2 and t.n_counters == 1 and t.n_instants == 1
+    assert validate_trace(t.to_chrome()) == []
+
+
+def test_validate_trace_flags_bad_events():
+    bad = {"traceEvents": [
+        {"ph": "Z", "pid": 1, "tid": 1, "name": "x", "ts": 0},
+        {"ph": "X", "pid": 1, "tid": 1, "name": "y", "ts": -1, "dur": 1},
+    ]}
+    problems = validate_trace(bad)
+    assert any("unknown ph" in p for p in problems)
+    assert any("bad ts" in p for p in problems)
+    # body event referencing a pid with no process_name metadata
+    assert any("process_name" in p for p in problems)
+    assert validate_trace({"nope": 1}) != []
+
+
+def test_fleet_trace_covers_all_three_levels(model):
+    t = traced_fleet_run(model)
+    evs = t.chrome_events()
+    procs = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    tracks = {e["args"]["name"] for e in evs
+              if e["ph"] == "M" and e["name"] == "thread_name"}
+    # core level: pool sub-task spans inside each replica process
+    assert any(p.startswith("node:") and "/replica" in p for p in procs)
+    assert "core0" in tracks
+    # machine level: phase regions, engine iterations, queue depth
+    assert {"phase:prefill", "phase:decode", "engine", "queue"} <= tracks
+    # fleet level: routing instants + node ratio counters in proc "main"
+    assert "fleet" in tracks
+    assert any(e["ph"] == "i" and e["name"].startswith("route:")
+               for e in evs)
+    assert any(tr.startswith("ratio:fleet:") for tr in tracks)
+    # counter tracks for ratio weights / bandwidth fraction / capacity
+    assert any(tr.startswith("ratio:") for tr in tracks)
+    assert any(tr.startswith("bw:") for tr in tracks)
+    assert "capacity" in tracks
+    assert validate_trace(t.to_chrome()) == []
+
+
+def test_fleet_trace_byte_identical_same_seed(model):
+    a = traced_fleet_run(model, seed=3)
+    b = traced_fleet_run(model, seed=3)
+    assert trace_bytes(a) == trace_bytes(b)
+    c = traced_fleet_run(model, seed=4)
+    assert trace_bytes(a) != trace_bytes(c)
+
+
+def test_tracer_write_is_deterministic(model, tmp_path):
+    t = traced_fleet_run(model)
+    p1, p2 = tmp_path / "a.json", tmp_path / "b.json"
+    t.write(str(p1))
+    t.write(str(p2))
+    assert p1.read_bytes() == p2.read_bytes()
+    assert validate_trace(str(p1)) == []
+
+
+# --------------------------------------------------------------- zero-cost --
+def test_disabled_hooks_never_evaluate_payloads():
+    assert _ev.TRACER is None
+
+    def boom():
+        raise AssertionError("payload evaluated on the disabled path")
+
+    _ev.emit_span("core0", "x", 0.0, 1.0, args=boom)
+    _ev.emit_counter("queue", 0.0, boom)
+    _ev.emit_instant("fleet", "x", 0.0, args=boom)
+    _ev.push_scope("nope")
+    _ev.pop_scope()
+    _ev.record("ratio", "k", t=0.0)   # RECORDER is None: dropped
+
+
+def test_span_hooks_are_noops_for_race_tracer():
+    """A tracer implementing only ``emit`` (the race detector) must not
+    receive spans — and the payload callables must stay unevaluated."""
+
+    class RaceOnly:
+        def __init__(self):
+            self.events = []
+
+        def emit(self, event):
+            self.events.append(event)
+
+    def boom():
+        raise AssertionError("args evaluated for a span-less tracer")
+
+    rt = RaceOnly()
+    prev = _ev.install(rt)
+    try:
+        _ev.emit_span("core0", "x", 0.0, 1.0, args=boom)
+        _ev.emit_counter("queue", 0.0, boom)
+        _ev.emit_instant("fleet", "x", 0.0, args=boom)
+        _ev.push_scope("s")
+        _ev.pop_scope()
+        _ev.emit_read("obj", "f")      # the hook it does implement works
+    finally:
+        _ev.install(prev)
+    assert len(rt.events) == 1
+
+
+# ---------------------------------------------------------------- recorder --
+def test_recorder_ring_is_bounded():
+    r = FlightRecorder(capacity=4)
+    for i in range(10):
+        r.record("ratio", f"k{i}", float(i), {"i": i})
+    assert len(r) == 4
+    snap = r.snapshot("test")
+    assert snap["n_records"] == 4 and snap["n_dropped"] == 6
+    assert [rec["key"] for rec in snap["records"]] == ["k6", "k7", "k8", "k9"]
+
+
+def test_recorder_slo_burn_trips_on_seeded_run(model, tmp_path):
+    """A fleet run against an impossibly tight TTFT SLO must burn: every
+    latency record violates, and ``burn_window`` consecutive violations
+    dump the ring to disk."""
+    path = tmp_path / "flight.json"
+    rec = FlightRecorder(path=str(path), slo_ttft=1e-6, burn_window=3)
+    traced_fleet_run(model, recorder=rec)
+    assert rec.trips, "SLO burn never tripped the recorder"
+    assert rec.trips[0]["reason"].startswith("slo_burn")
+    dump = json.loads(path.read_text())
+    assert dump["schema"] == "repro.obs.flight_recorder/1"
+    kinds = {r["kind"] for r in dump["records"]}
+    assert "latency" in kinds and "ratio" in kinds and "route" in kinds
+
+
+def test_recorder_no_trip_within_slo(model):
+    rec = FlightRecorder(slo_ttft=1e9, slo_tpot=1e9, burn_window=3)
+    traced_fleet_run(model, recorder=rec)
+    assert rec.trips == []
+    assert any(r.kind == "latency" for r in rec.records())
+
+
+def test_contract_violation_trips_recorder(tmp_path):
+    from repro.analysis import invariants
+
+    path = tmp_path / "contract.json"
+    rec = FlightRecorder(path=str(path))
+    rec.record("ratio", "membw/head", 1.0, {"ratios": [0.5, 0.5]})
+    prev = _ev.install_recorder(rec)
+    try:
+        with pytest.raises(invariants.ContractViolation):
+            invariants.check_ema_step([1.0], [1.0], [-1.0])
+    finally:
+        _ev.install_recorder(prev)
+    assert rec.trips and rec.trips[0]["reason"].startswith("contract IV001")
+    dump = json.loads(path.read_text())
+    assert dump["records"][0]["key"] == "membw/head"
+
+
+def test_recorder_trip_never_raises_on_bad_path():
+    rec = FlightRecorder(path="/nonexistent-dir/nope/flight.json")
+    rec.record("capacity", "core0", 0.0, {"action": "park"})
+    dump = rec.trip("test")          # OSError swallowed
+    assert dump["n_records"] == 1
+
+
+def test_capacity_events_are_recorded():
+    from repro.core.hybrid_sim import make_machine
+
+    rec = FlightRecorder()
+    prev = _ev.install_recorder(rec)
+    try:
+        m = make_machine("ultra-125h")
+        m.park(0, t_start=1.0)
+        m.set_freq_scale(1, 2.0, t_start=2.0, t_end=3.0)
+        m.unpark(0)
+    finally:
+        _ev.install_recorder(prev)
+    actions = [(r.kind, r.payload.get("action")) for r in rec.records()]
+    assert ("capacity", "park") in actions
+    assert ("capacity", "scale") in actions
+    assert ("capacity", "unpark") in actions
+    # payloads are JSON-safe (open-ended windows must not serialize as inf)
+    json.dumps([r.to_dict() for r in rec.records()])
+
+
+# ----------------------------------------------------------------- metrics --
+def test_counter_gauge_histogram_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("reqs_total", "requests")
+    c.inc(outcome="served")
+    c.inc(2, outcome="served")
+    c.inc(outcome="shed")
+    assert c.value(outcome="served") == 3
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = reg.gauge("queue_depth")
+    g.set(5)
+    g.inc(-2)
+    assert g.value() == 3
+    h = reg.histogram("ttft_seconds", "ttft", buckets=TTFT_BUCKETS)
+    h.observe_many([0.05, 0.3, 99.0])
+    assert h.count() == 3
+    samples = dict(((n, tuple(sorted(l.items()))), v)
+                   for n, l, v in h.samples())
+    assert samples[("ttft_seconds_bucket", (("le", "+Inf"),))] == 3
+    assert samples[("ttft_seconds_count", ())] == 3
+    # re-registration returns the same object; kind mismatch raises
+    assert reg.counter("reqs_total") is c
+    with pytest.raises(ValueError):
+        reg.gauge("reqs_total")
+
+
+def test_prometheus_text_passes_exposition_lint():
+    reg = MetricsRegistry()
+    reg.counter("repro_requests_total", "finished").inc(4, outcome="served")
+    reg.gauge("repro_goodput", "goodput").set(1.5)
+    h = reg.histogram("repro_ttft_seconds", "ttft", buckets=TTFT_BUCKETS)
+    h.observe_many([0.05, 0.2, 0.9, 4.0])
+    text = reg.prometheus_text()
+    assert lint_exposition(text) == []
+    assert "# TYPE repro_ttft_seconds histogram" in text
+    assert 'le="+Inf"' in text
+
+
+def test_exposition_lint_flags_problems():
+    assert any("no TYPE" in p for p in lint_exposition("orphan_metric 1\n"))
+    bad_hist = (
+        "# TYPE h histogram\n"
+        'h_bucket{le="1"} 5\n'
+        'h_bucket{le="+Inf"} 3\n'     # cumulative count decreases
+        "h_sum 2\n"
+        "h_count 3\n")
+    assert any("decreases" in p for p in lint_exposition(bad_hist))
+    no_inf = (
+        "# TYPE h histogram\n"
+        'h_bucket{le="1"} 5\n'
+        "h_sum 2\nh_count 5\n")
+    assert any("+Inf" in p for p in lint_exposition(no_inf))
+    assert any("non-numeric" in p
+               for p in lint_exposition("# TYPE x counter\nx nope\n"))
+
+
+def test_latency_report_to_dict_schema():
+    rep = LatencyReport(
+        n_requests=4, n_finished=3, duration=2.0, generated_tokens=12,
+        ttft={50: 0.1, 90: 0.2, 99: 0.3}, tpot={50: 0.05, 90: 0.06, 99: 0.07},
+        goodput=1.5, clock="virtual", wall_duration=0.8,
+        ttft_samples=(0.1, 0.2), tpot_samples=(0.05,))
+    d = rep.to_dict()
+    assert d["schema"] == "repro.serving.latency_report/1"
+    assert set(d) == {
+        "schema", "n_requests", "n_finished", "n_shed", "n_degraded",
+        "clock", "duration_s", "wall_duration_s", "generated_tokens",
+        "throughput_tok_s", "goodput_req_s", "ttft_s", "tpot_s"}
+    assert d["ttft_s"] == {"p50": 0.1, "p90": 0.2, "p99": 0.3}
+    assert d["throughput_tok_s"] == 6.0
+    json.dumps(d)   # JSON-safe
+    # NaN percentiles (nothing served) become None, not Infinity/NaN
+    empty = LatencyReport.from_requests([])
+    assert empty.to_dict()["ttft_s"]["p50"] is None
+    json.dumps(empty.to_dict())
+
+
+def test_latency_report_publish():
+    rep = LatencyReport(
+        n_requests=4, n_finished=4, duration=2.0, generated_tokens=12,
+        ttft={50: 0.1}, tpot={50: 0.05}, goodput=1.5, n_shed=1,
+        ttft_samples=(0.05, 0.3, 1.9), tpot_samples=(0.02, 0.3))
+    reg = MetricsRegistry()
+    rep.publish(reg)
+    assert reg.get("repro_ttft_seconds").count() == 3
+    assert reg.get("repro_tpot_seconds").count() == 2
+    assert reg.get("repro_requests_total").value(outcome="served") == 3
+    assert reg.get("repro_requests_total").value(outcome="shed") == 1
+    assert reg.get("repro_goodput_requests_per_second").value() == 1.5
+    assert lint_exposition(reg.prometheus_text()) == []
+    # buckets are the explicit SLO-matched sets
+    assert reg.get("repro_ttft_seconds").buckets == TTFT_BUCKETS
+    assert reg.get("repro_tpot_seconds").buckets == TPOT_BUCKETS
+
+
+# ------------------------------------------------------------------- audit --
+def test_compiled_step_zero_callbacks_with_tracing_enabled():
+    """JA001 re-audit: installing the span tracer must not push host
+    callbacks into the compiled decode step (spans are emitted host-side
+    between steps, never in-graph)."""
+    from repro.analysis.jaxpr_audit import (audit_step, count_callbacks,
+                                            trace_compiled_step)
+    from repro.configs import reduced_config
+    from repro.kernels import GEMV_ISA, HybridKernelDispatcher
+    from repro.models import BalancedTrunk
+
+    cfg = reduced_config("granite-8b")
+    params = init_params(cfg, jax.random.key(0))
+    disp = HybridKernelDispatcher.virtual("ultra-125h", execute=True)
+    compiled = BalancedTrunk.from_params(cfg, params, disp, quant="q4",
+                                         mode="compiled")
+    tracer = SpanTracer()
+    prev = _ev.install(tracer)
+    try:
+        step = trace_compiled_step(cfg, params, compiled, isa=GEMV_ISA)
+    finally:
+        _ev.install(prev)
+    assert audit_step(step) == []
+    assert count_callbacks(step.jaxpr) == {}
